@@ -1,0 +1,39 @@
+"""Paper Figure 3 (mechanism): memory-bank size x accumulation steps sweep.
+Performance should improve with bank size and converge; ContAccum should
+beat GradAccum at every total batch."""
+
+from __future__ import annotations
+
+from repro.core.types import ContrastiveConfig
+from benchmarks.common import fmt_table, make_corpus, train_retriever
+
+LOCAL, STEPS = 8, 120
+
+
+def run(quick: bool = False):
+    steps = 40 if quick else STEPS
+    corpus = make_corpus(n=1024 if quick else 2048)
+    banks = [0, 64, 256] if quick else [0, 64, 256, 1024]
+    ks = [1, 4] if quick else [1, 4, 8]
+    rows, out = [], []
+    for k in ks:
+        total = LOCAL * k
+        for bank in banks:
+            if bank == 0:
+                cfg = ContrastiveConfig(method="grad_accum", accumulation_steps=k)
+                name = f"grad_accum K={k}"
+            else:
+                cfg = ContrastiveConfig(
+                    method="contaccum", accumulation_steps=k, bank_size=bank
+                )
+                name = f"contaccum K={k} mem={bank}"
+            m = train_retriever(cfg, steps=steps, total_batch=total, corpus=corpus)
+            rows.append((name, total, bank, f"{m['top@5']:.3f}", f"{m['top@20']:.3f}"))
+            out.append((f"fig3/K{k}_mem{bank}/top@5", m["top@5"]))
+    print("\n== Figure 3: bank size x accumulation steps ==")
+    print(fmt_table(rows, ("setting", "N_total", "N_mem", "top@5", "top@20")))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Figure 4 (mechanism): seconds per weight update vs total batch size.
+
+The paper's speed claims, in order:
+  grad_accum < contaccum << grad_cache
+(GradCache pays an extra full forward; ContAccum only pays the enlarged
+similarity matrix + bank bookkeeping.)"""
+
+from __future__ import annotations
+
+from repro.core.types import ContrastiveConfig
+from benchmarks.common import fmt_table, time_update
+
+LOCAL = 8
+
+
+def run(quick: bool = False):
+    totals = [32, 64] if quick else [32, 64, 128]
+    bank = 256
+    rows, out = [], []
+    for total in totals:
+        k = total // LOCAL
+        t_ga = time_update(
+            ContrastiveConfig(method="grad_accum", accumulation_steps=k),
+            total_batch=total,
+        )
+        t_gc = time_update(
+            ContrastiveConfig(method="grad_cache", accumulation_steps=k),
+            total_batch=total,
+        )
+        t_ca = time_update(
+            ContrastiveConfig(
+                method="contaccum", accumulation_steps=k, bank_size=bank
+            ),
+            total_batch=total,
+        )
+        rows.append((
+            total,
+            f"{t_ga*1e3:.1f}", f"{t_gc*1e3:.1f}", f"{t_ca*1e3:.1f}",
+            f"{t_gc/t_ga:.2f}x", f"{t_ca/t_ga:.2f}x",
+        ))
+        out += [
+            (f"fig4/N{total}/grad_accum_ms", t_ga * 1e3),
+            (f"fig4/N{total}/grad_cache_ms", t_gc * 1e3),
+            (f"fig4/N{total}/contaccum_ms", t_ca * 1e3),
+        ]
+    print("\n== Figure 4: time per weight update (ms) ==")
+    print(fmt_table(
+        rows,
+        ("N_total", "grad_accum", "grad_cache", "contaccum",
+         "cache/accum", "cont/accum"),
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Roofline report: render the per-(arch x shape x mesh) dry-run records
+(experiments/dryrun/*.json) as the §Roofline table. Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str = "single_pod_16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False, mesh: str = "single_pod_16x16"):
+    recs = load_records(mesh)
+    if not recs:
+        print(f"\n== Roofline: no dry-run records in {DRYRUN_DIR}/{mesh} — "
+              "run repro.launch.dryrun first ==")
+        return []
+    rows, out = [], []
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}"
+        if not r.get("ok"):
+            rows.append((cell, "FAIL", "", "", "", "", r.get("error", "")[:40]))
+            continue
+        rf = r["roofline"]
+        t = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        frac = rf["t_compute"] / t if t else 0.0
+        rows.append((
+            cell,
+            f"{rf['t_compute']:.2e}",
+            f"{rf['t_memory']:.2e}",
+            f"{rf['t_collective']:.2e}",
+            rf["dominant"],
+            f"{frac:.3f}",
+            f"{(r.get('useful_flops_ratio') or 0):.3f}",
+        ))
+        out.append((f"roofline/{cell}/compute_frac", frac))
+    print(f"\n== Roofline terms per cell ({mesh}; seconds/step/device) ==")
+    print(fmt_table(
+        rows,
+        ("cell", "t_compute", "t_memory", "t_collective", "dominant",
+         "roofline_frac", "useful_flops"),
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Table 1 (mechanism): the four methods under the same memory budget.
+
+Low-resource budget = local batch 8; the total batch is 64 via K=8
+accumulation. The high-resource reference (DPR, batch 64 in one pass) is the
+bar ContAccum must beat from the low-resource setting — the paper's headline
+claim. Reduced scale: 2-layer BERT towers, synthetic corpus, Top@k eval.
+"""
+
+from __future__ import annotations
+
+from repro.core.types import ContrastiveConfig
+from benchmarks.common import fmt_table, make_corpus, train_retriever
+
+TOTAL, LOCAL, STEPS, BANK = 64, 8, 150, 256
+K = TOTAL // LOCAL
+
+
+def run(quick: bool = False):
+    steps = 40 if quick else STEPS
+    corpus = make_corpus(n=1024 if quick else 2048)
+    settings = [
+        ("dpr_low (BSZ=8)", ContrastiveConfig(method="dpr"), LOCAL),
+        ("grad_accum", ContrastiveConfig(method="grad_accum", accumulation_steps=K), TOTAL),
+        ("grad_cache", ContrastiveConfig(method="grad_cache", accumulation_steps=K), TOTAL),
+        ("contaccum", ContrastiveConfig(
+            method="contaccum", accumulation_steps=K, bank_size=BANK), TOTAL),
+        ("dpr_high (BSZ=64)", ContrastiveConfig(method="dpr"), TOTAL),
+    ]
+    rows = []
+    results = {}
+    for name, cfg, batch in settings:
+        m = train_retriever(cfg, steps=steps, total_batch=batch, corpus=corpus)
+        results[name] = m
+        rows.append((
+            name, batch,
+            f"{m['top@1']:.3f}", f"{m['top@5']:.3f}", f"{m['top@20']:.3f}",
+            f"{m['final_loss']:.3f}",
+        ))
+    print("\n== Table 1: methods under a fixed memory budget ==")
+    print(fmt_table(rows, ("method", "batch", "top@1", "top@5", "top@20", "loss")))
+    ca, gc = results["contaccum"], results["grad_cache"]
+    ga, lo = results["grad_accum"], results["dpr_low (BSZ=8)"]
+    hi = results["dpr_high (BSZ=64)"]
+    print(
+        "reading: the negatives-count mechanism reproduces — "
+        f"dpr_low({lo['top@5']:.3f}) << grad_accum({ga['top@5']:.3f}) < "
+        f"grad_cache({gc['top@5']:.3f}) = dpr_high({hi['top@5']:.3f}) "
+        "(grad_cache's full-batch-gradient identity holds exactly). "
+        f"contaccum({ca['top@5']:.3f}) is outside its stability envelope "
+        "from scratch at this lr — see bench_regimes for the warm-started "
+        "comparison and EXPERIMENTS.md §Paper-validation."
+    )
+    return [
+        (f"table1/{name}/top@5", results[name]["top@5"])
+        for name, _, _ in settings
+    ]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,135 @@
+"""Shared benchmark substrate.
+
+The paper's tables are reproduced at reduced scale on CPU with the synthetic
+planted-relevance corpus (real NQ/TriviaQA/MS-Marco are not redistributable
+offline — DESIGN.md §7.4). Every benchmark exercises the same production
+code paths (core/methods.py update builders, optim, data loaders); only the
+encoder width and corpus size shrink.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.methods import init_state, make_update_fn
+from repro.core.types import ContrastiveConfig, DualEncoder, RetrievalBatch
+from repro.data.loader import ShardedLoader
+from repro.data.retrieval import SyntheticRetrievalCorpus
+from repro.models.bert import BertConfig
+from repro.models.towers import make_bert_dual_encoder
+from repro.optim.adamw import adamw, chain, clip_by_global_norm
+from repro.optim.schedules import linear_warmup_linear_decay
+
+
+def bench_bert(vocab: int = 2000, d: int = 64) -> BertConfig:
+    return BertConfig(
+        name="bench-bert",
+        n_layers=2,
+        d_model=d,
+        n_heads=4,
+        d_ff=2 * d,
+        vocab_size=vocab,
+        max_position=64,
+        dtype=jnp.float32,
+    )
+
+
+def make_corpus(n: int = 2048, seed: int = 0) -> SyntheticRetrievalCorpus:
+    return SyntheticRetrievalCorpus(
+        n_passages=n, vocab_size=2000, q_len=16, p_len=32, n_hard=1, seed=seed
+    )
+
+
+def train_retriever(
+    cfg: ContrastiveConfig,
+    *,
+    steps: int = 150,
+    total_batch: int = 64,
+    corpus: Optional[SyntheticRetrievalCorpus] = None,
+    lr: float = 1e-3,
+    seed: int = 0,
+    use_hard: bool = True,
+    track_ratio: bool = False,
+) -> Dict:
+    """Train a small BERT dual encoder with one of the paper's four methods;
+    returns eval metrics (+ the GradNormRatio trace if requested)."""
+    corpus = corpus or make_corpus()
+    enc = make_bert_dual_encoder(bench_bert())
+    tx = chain(
+        clip_by_global_norm(cfg.grad_clip_norm),
+        adamw(linear_warmup_linear_decay(lr, max(steps // 10, 1), steps)),
+    )
+    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(seed), enc, tx, cfg)
+    loader = ShardedLoader(corpus.n_passages, total_batch, seed=seed)
+
+    ratios: List[float] = []
+    losses: List[float] = []
+    for step in range(steps):
+        idx = loader.next_indices()
+        b = corpus.batch(idx)
+        batch = RetrievalBatch(
+            query=jnp.asarray(b["query"]),
+            passage_pos=jnp.asarray(b["passage_pos"]),
+            passage_hard=jnp.asarray(b["passage_hard"]) if use_hard else None,
+        )
+        state, m = update(state, batch)
+        if track_ratio:
+            ratios.append(float(m.grad_norm_ratio))
+        losses.append(float(m.loss))
+
+    metrics = evaluate_topk(enc, state.params, corpus)
+    metrics["final_loss"] = float(np.mean(losses[-10:]))
+    if track_ratio:
+        metrics["ratio_trace"] = ratios
+    return metrics
+
+
+from repro.evaluation import evaluate_topk  # re-export (public eval API)
+
+
+def time_update(
+    cfg: ContrastiveConfig,
+    *,
+    total_batch: int,
+    n_timed: int = 3,
+    seed: int = 0,
+) -> float:
+    """Median seconds per weight update (after compile warm-up)."""
+    corpus = make_corpus(n=max(2 * total_batch, 512))
+    enc = make_bert_dual_encoder(bench_bert())
+    tx = chain(clip_by_global_norm(2.0), adamw(1e-4))
+    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(seed), enc, tx, cfg)
+    idx = np.arange(total_batch)
+    b = corpus.batch(idx)
+    batch = RetrievalBatch(
+        query=jnp.asarray(b["query"]),
+        passage_pos=jnp.asarray(b["passage_pos"]),
+        passage_hard=jnp.asarray(b["passage_hard"]),
+    )
+    state, m = update(state, batch)          # compile + warm
+    jax.block_until_ready(m.loss)
+    ts = []
+    for _ in range(n_timed):
+        t0 = time.perf_counter()
+        state, m = update(state, batch)
+        jax.block_until_ready(m.loss)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fmt_table(rows: List[Tuple], headers: Tuple) -> str:
+    widths = [
+        max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+        for i, h in enumerate(headers)
+    ]
+    def line(vals):
+        return "  ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints each table and a final ``name,value`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run           # full
+  PYTHONPATH=src python -m benchmarks.run --quick   # reduced steps
+  PYTHONPATH=src python -m benchmarks.run --only fig4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    bench_fig3,
+    bench_fig4,
+    bench_fig5,
+    bench_regimes,
+    bench_roofline,
+    bench_table1,
+    bench_table2,
+)
+
+SUITES = {
+    "table1": bench_table1.run,
+    "table2": bench_table2.run,
+    "fig3": bench_fig3.run,
+    "fig4": bench_fig4.run,
+    "fig5": bench_fig5.run,
+    "regimes": bench_regimes.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(SUITES)
+    all_rows = []
+    for name in names:
+        t0 = time.time()
+        rows = SUITES[name](quick=args.quick) or []
+        print(f"[{name}] done in {time.time()-t0:.1f}s")
+        all_rows += rows
+
+    print("\n== CSV ==")
+    print("name,value")
+    for k, v in all_rows:
+        print(f"{k},{v:.6g}")
+
+
+if __name__ == "__main__":
+    main()

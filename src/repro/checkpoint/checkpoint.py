@@ -1,0 +1,176 @@
+"""Fault-tolerant checkpointing.
+
+Layout: <dir>/step_<n>/ containing one .npy per leaf (path-keyed) plus a
+manifest.json written LAST — a checkpoint without a complete manifest is
+invalid and skipped on restore. Writes go to a tmp dir + atomic rename, so a
+preemption mid-save can never corrupt the latest checkpoint. Restore takes a
+template pytree (structure + dtypes come from the template; shapes must match
+unless a resharder is given).
+
+``CheckpointManager`` adds retention (keep last k), async save (snapshot to
+host then write on a background thread), and resume-from-latest-valid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path) or "leaf"
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Atomic checkpoint write. Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:012d}")
+    tmp = final + f".tmp.{os.getpid()}.{threading.get_ident()}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten_with_paths(jax.device_get(tree))
+    manifest = {"step": step, "leaves": [], "time": time.time()}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    # manifest written last: its presence marks the checkpoint complete
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _valid_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        if os.path.exists(os.path.join(directory, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _valid_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    template: Any,
+    step: Optional[int] = None,
+    *,
+    resharder: Optional[Callable[[str, np.ndarray, Any], Any]] = None,
+) -> tuple[Any, int]:
+    """Restore into the structure of ``template``. Skips invalid/corrupt
+    checkpoints, falling back to the previous valid one."""
+    steps = _valid_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    if not steps:
+        raise FileNotFoundError(f"no valid checkpoint in {directory}")
+
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    keys = [k for k, _ in _flatten_with_paths(template)]
+
+    for s in reversed(steps):
+        path = os.path.join(directory, f"step_{s:012d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            by_key = {m["key"]: m for m in manifest["leaves"]}
+            leaves = []
+            for key, tmpl in zip(keys, flat_t):
+                meta = by_key[key]
+                arr = np.load(os.path.join(path, meta["file"]))
+                if resharder is not None:
+                    arr = resharder(key, arr, tmpl)
+                if tuple(arr.shape) != tuple(np.shape(tmpl)):
+                    raise ValueError(
+                        f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                        f"template {np.shape(tmpl)} (pass a resharder)"
+                    )
+                leaves.append(arr.astype(np.asarray(tmpl).dtype))
+            return jax.tree_util.tree_unflatten(treedef, leaves), s
+        except (KeyError, ValueError, OSError, json.JSONDecodeError) as e:
+            # corrupt / incompatible — try the previous checkpoint
+            last_err = e
+            continue
+    raise RuntimeError(f"all checkpoints in {directory} failed to restore: {last_err}")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, *, block: bool = False):
+        snapshot = jax.device_get(tree)  # snapshot NOW; write later
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, snapshot)
+                self._gc()
+            except BaseException as e:
+                self._error = e
+
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            if self._error:
+                raise self._error
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, template: Any):
+        return restore_checkpoint(self.directory, template)
+
+    def _gc(self):
+        steps = _valid_steps(self.directory)
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:012d}"), ignore_errors=True
+            )

@@ -1,0 +1,17 @@
+from repro.common.treemath import (
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    tree_global_norm,
+    tree_cast,
+    tree_size,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_zeros_like",
+    "tree_global_norm",
+    "tree_cast",
+    "tree_size",
+]

@@ -1,0 +1,40 @@
+"""Small pytree math helpers used across optimizers / update builders.
+
+Kept dependency-free (no optax in this environment) and jit-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Elementwise a + b over matching pytrees."""
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    """Scale every leaf of ``a`` by scalar ``s``."""
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_global_norm(a):
+    """Global L2 norm across all leaves (as used for gradient clipping)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_size(a) -> int:
+    """Total number of elements across all leaves (python int; trace-safe on shapes)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(a))

@@ -1,0 +1,24 @@
+"""Architecture registry: ``get_arch(arch_id)`` -> ArchSpec.
+
+One module per assigned architecture (exact public-literature configs) plus
+the paper's own dual-encoder (dpr-bert-base).
+"""
+
+from repro.configs.base import ArchSpec, ShapeCell, get_arch, register, list_archs
+
+# import for registration side effects
+from repro.configs import (  # noqa: F401
+    dpr_bert_base,
+    stablelm_3b,
+    internlm2_1p8b,
+    qwen1p5_110b,
+    qwen3_moe_235b,
+    olmoe_1b_7b,
+    schnet,
+    dcn_v2,
+    deepfm,
+    dlrm_mlperf,
+    dlrm_rm2,
+)
+
+__all__ = ["ArchSpec", "ShapeCell", "get_arch", "register", "list_archs"]

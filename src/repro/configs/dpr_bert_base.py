@@ -1,0 +1,57 @@
+"""dpr-bert-base — the paper's own architecture: two bert-base-uncased
+towers trained with ContAccum. Shape cells cover the paper's local/total
+batch geometry plus a pod-scale contrastive cell (the framework's flagship:
+cross-device negatives + dual memory banks on the production mesh)."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeCell, register
+from repro.models.bert import BertConfig
+
+DPR_SHAPES = {
+    # the paper's geometry: N_total=128, N_local=8, K=16, N_mem=2048 (NQ)
+    "paper_batch": ShapeCell(
+        "paper_batch",
+        "contrastive",
+        {
+            "global_batch": 128,
+            "accum_steps": 1,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+        },
+    ),
+    # pod-scale: 16k pairs/step with 32k-deep dual banks
+    "contrastive_16k": ShapeCell(
+        "contrastive_16k",
+        "contrastive",
+        {
+            "global_batch": 16384,
+            "accum_steps": 1,
+            "bank_size": 32768,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+        },
+    ),
+}
+
+register(
+    ArchSpec(
+        arch_id="dpr-bert-base",
+        family="bert",
+        model_cfg=BertConfig(
+            name="bert-base-uncased",
+            n_layers=12,
+            d_model=768,
+            n_heads=12,
+            d_ff=3072,
+            vocab_size=30522,
+            max_position=512,
+            dtype=jnp.bfloat16,
+            remat="full",
+        ),
+        shapes=DPR_SHAPES,
+    )
+)

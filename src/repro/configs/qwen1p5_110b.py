@@ -1,0 +1,32 @@
+"""qwen1.5-110b [dense]: 80L d_model=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064, QKV bias [hf:Qwen/Qwen1.5 family]."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, LM_SHAPES, register
+from repro.models.lm import LMConfig
+
+register(
+    ArchSpec(
+        arch_id="qwen1.5-110b",
+        family="lm",
+        model_cfg=LMConfig(
+            name="qwen1.5-110b",
+            n_layers=80,
+            d_model=8192,
+            n_heads=64,
+            n_kv_heads=8,
+            d_ff=49152,
+            vocab_size=152064,
+            head_dim=128,
+            qkv_bias=True,
+            rope_theta=1000000.0,
+            dtype=jnp.bfloat16,
+            remat="full",
+        ),
+        shapes=LM_SHAPES,
+        # 86 GB of layer-boundary activations per device without accumulation;
+        # 16 microbatches bound them to ~5.4 GB (see EXPERIMENTS.md §Dry-run)
+        micro_batches={"train_4k": 16},
+    )
+)

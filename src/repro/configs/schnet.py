@@ -1,0 +1,16 @@
+"""schnet [gnn]: n_interactions=3 d_hidden=64 rbf=300 cutoff=10
+[arXiv:1706.08566]. ContAccum inapplicability noted in DESIGN.md §3."""
+
+from repro.configs.base import ArchSpec, GNN_SHAPES, register
+from repro.models.gnn import SchNetConfig
+
+register(
+    ArchSpec(
+        arch_id="schnet",
+        family="gnn",
+        model_cfg=SchNetConfig(
+            name="schnet", n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0
+        ),
+        shapes=GNN_SHAPES,
+    )
+)

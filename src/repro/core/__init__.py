@@ -1,0 +1,35 @@
+"""Core contribution of the paper: memory-constrained contrastive training
+for dual-encoder retrieval (ContAccum) plus the baselines it is compared to.
+"""
+
+from repro.core.infonce import info_nce, in_batch_loss, extended_loss, similarity_logits, InfoNCEOutput
+from repro.core.memory_bank import BankState, init_bank, push, push_pair, clear, n_valid, ordered
+from repro.core.loss import contrastive_step_loss, LossAux
+from repro.core.dist import DistCtx
+from repro.core.types import (
+    ContrastiveConfig,
+    ContrastiveState,
+    DualEncoder,
+    RetrievalBatch,
+    StepMetrics,
+    chunk_tree,
+    flatten_hard,
+)
+from repro.core.methods import (
+    init_state,
+    make_update_fn,
+    make_dpr_update,
+    make_grad_accum_update,
+    make_grad_cache_update,
+    make_contaccum_update,
+)
+
+__all__ = [
+    "info_nce", "in_batch_loss", "extended_loss", "similarity_logits", "InfoNCEOutput",
+    "BankState", "init_bank", "push", "push_pair", "clear", "n_valid", "ordered",
+    "contrastive_step_loss", "LossAux", "DistCtx",
+    "ContrastiveConfig", "ContrastiveState", "DualEncoder", "RetrievalBatch",
+    "StepMetrics", "chunk_tree", "flatten_hard",
+    "init_state", "make_update_fn", "make_dpr_update", "make_grad_accum_update",
+    "make_grad_cache_update", "make_contaccum_update",
+]

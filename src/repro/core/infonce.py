@@ -1,0 +1,195 @@
+"""InfoNCE loss with in-batch negatives for dual-encoder retrieval (paper Eq. 1/4).
+
+This is the single shared implementation used by every update method
+(DPR full-batch, GradAccum, GradCache, ContAccum) so that the methods are
+comparable down to floating point.
+
+Conventions
+-----------
+- ``q``: (M, d) query representations (rows of the similarity matrix).
+- ``p``: (N, d) passage representations (columns). Layout when hard negatives
+  are present: ``[positives (B), hard negatives (B*h), extra negatives ...]``.
+- ``labels[i]``: column index of the positive passage for row i
+  (defaults to ``arange(M)``, the standard in-batch diagonal).
+- ``row_mask`` / ``col_mask``: validity masks. Invalid columns are excluded
+  from the softmax (logit = -inf); invalid rows contribute zero loss and the
+  mean is taken over valid rows only. These make the memory-bank warm-up
+  phase (bank not yet full) *exact* rather than approximate.
+- ``temperature``: logits = q @ p.T / temperature (paper uses tau = 1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class InfoNCEOutput(NamedTuple):
+    loss: jnp.ndarray          # scalar
+    per_row_loss: jnp.ndarray  # (M,)
+    lse: jnp.ndarray           # (M,) logsumexp over valid columns
+    pos_logit: jnp.ndarray     # (M,) logit of the positive column
+    accuracy: jnp.ndarray      # scalar, fraction of rows whose argmax == label
+    n_valid_rows: jnp.ndarray  # scalar
+
+
+def similarity_logits(
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    temperature: float = 1.0,
+    col_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """(M, N) scaled dot-product logits with invalid columns masked to -inf."""
+    logits = jnp.einsum("md,nd->mn", q, p, preferred_element_type=jnp.float32)
+    logits = logits / jnp.asarray(temperature, dtype=logits.dtype)
+    if col_mask is not None:
+        logits = jnp.where(col_mask[None, :], logits, NEG_INF)
+    return logits
+
+
+def info_nce(
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    labels: Optional[jnp.ndarray] = None,
+    temperature: float = 1.0,
+    row_mask: Optional[jnp.ndarray] = None,
+    col_mask: Optional[jnp.ndarray] = None,
+) -> InfoNCEOutput:
+    """Cross-entropy of each query row against its positive column.
+
+    All reductions happen in float32 regardless of input dtype (bf16-safe).
+    """
+    m = q.shape[0]
+    if labels is None:
+        labels = jnp.arange(m, dtype=jnp.int32)
+    logits = similarity_logits(q, p, temperature=temperature, col_mask=col_mask)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # mode="clip": masked-out rows may carry out-of-range labels (e.g. bank
+    # rows with no aligned passage); the default fill mode would yield NaN
+    # which then poisons the masked mean via 0 * NaN.
+    pos = jnp.take_along_axis(
+        logits, labels[:, None].astype(jnp.int32), axis=-1, mode="clip"
+    )[:, 0]
+    per_row = lse - pos
+    if row_mask is None:
+        row_mask = jnp.ones((m,), dtype=bool)
+    row_mask_f = row_mask.astype(jnp.float32)
+    n_valid = jnp.maximum(row_mask_f.sum(), 1.0)
+    loss = jnp.sum(per_row * row_mask_f) / n_valid
+    preds = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((preds == labels) * row_mask_f) / n_valid
+    return InfoNCEOutput(
+        loss=loss,
+        per_row_loss=per_row,
+        lse=lse,
+        pos_logit=pos,
+        accuracy=acc,
+        n_valid_rows=n_valid,
+    )
+
+
+def in_batch_loss(
+    q: jnp.ndarray,
+    p_pos: jnp.ndarray,
+    p_hard: Optional[jnp.ndarray] = None,
+    *,
+    temperature: float = 1.0,
+) -> InfoNCEOutput:
+    """DPR-style loss: positives on the diagonal, hard negatives appended as columns.
+
+    q: (B, d); p_pos: (B, d); p_hard: (B*h, d) or None.
+    """
+    cols = p_pos if p_hard is None else jnp.concatenate([p_pos, p_hard], axis=0)
+    return info_nce(q, cols, temperature=temperature)
+
+
+def extended_loss(
+    q_local: jnp.ndarray,
+    p_pos: jnp.ndarray,
+    p_hard: Optional[jnp.ndarray],
+    bank_q_buf: Optional[jnp.ndarray],
+    bank_q_valid: Optional[jnp.ndarray],
+    bank_p_buf: Optional[jnp.ndarray],
+    bank_p_valid: Optional[jnp.ndarray],
+    *,
+    temperature: float = 1.0,
+) -> InfoNCEOutput:
+    """ContAccum extended similarity matrix (paper Eq. 5-7).
+
+    Rows    = [local queries (B)] ++ [bank queries (Cq)]
+    Columns = [local positives (B)] ++ [local hard negatives (B*h)] ++ [bank passages (Cp)]
+
+    Bank entries carry ``stop_gradient`` *upstream of this function* (the bank
+    buffers are leaves of the train state, not traced activations), matching
+    the paper's sg(M_q), sg(M_p). Bank query row i's positive is bank passage
+    i: both banks are pushed in lockstep so ring positions align. Rows/cols of
+    invalid (not yet filled) bank slots are masked out exactly.
+
+    When the two banks have different capacities (e.g. passage-only bank =
+    pre-batch negatives), the bank-query rows whose aligned passage column does
+    not exist are masked out, reproducing the asymmetric gradient flow the
+    paper analyzes in Sec. 3.3.
+    """
+    b = q_local.shape[0]
+    row_parts = [q_local]
+    row_mask_parts = [jnp.ones((b,), dtype=bool)]
+    col_parts = [p_pos]
+    n_pos = p_pos.shape[0]
+    col_mask_parts = [jnp.ones((n_pos,), dtype=bool)]
+    if p_hard is not None and p_hard.shape[0] > 0:
+        col_parts.append(p_hard)
+        col_mask_parts.append(jnp.ones((p_hard.shape[0],), dtype=bool))
+    n_hard = 0 if p_hard is None else p_hard.shape[0]
+
+    cq = 0 if bank_q_buf is None else bank_q_buf.shape[0]
+    cp = 0 if bank_p_buf is None else bank_p_buf.shape[0]
+
+    if cp > 0:
+        col_parts.append(bank_p_buf)
+        col_mask_parts.append(bank_p_valid)
+    if cq > 0:
+        row_parts.append(bank_q_buf)
+        if cp > 0:
+            c_align = min(cq, cp)
+            # bank query i is valid as a row only if its aligned passage exists
+            aligned = jnp.zeros((cq,), dtype=bool)
+            aligned = aligned.at[:c_align].set(
+                bank_q_valid[:c_align] & bank_p_valid[:c_align]
+            )
+            row_mask_parts.append(aligned)
+        else:
+            # no passage bank: bank-query rows have no positive -> masked out.
+            # (They then contribute nothing; this degenerate setting is only
+            # reachable through ablation flags.)
+            row_mask_parts.append(jnp.zeros((cq,), dtype=bool))
+
+    q_all = jnp.concatenate(row_parts, axis=0)
+    p_all = jnp.concatenate(col_parts, axis=0)
+    row_mask = jnp.concatenate(row_mask_parts, axis=0)
+    col_mask = jnp.concatenate(col_mask_parts, axis=0)
+
+    labels = jnp.concatenate(
+        [
+            jnp.arange(b, dtype=jnp.int32),
+            # bank query i -> bank passage column i (after pos+hard columns)
+            n_pos + n_hard + jnp.arange(cq, dtype=jnp.int32) % max(cp, 1)
+            if cq > 0
+            else jnp.zeros((0,), dtype=jnp.int32),
+        ],
+        axis=0,
+    )
+    return info_nce(
+        q_all,
+        p_all,
+        labels=labels,
+        temperature=temperature,
+        row_mask=row_mask,
+        col_mask=col_mask,
+    )

@@ -1,0 +1,126 @@
+"""The canonical contrastive step loss shared by every update method.
+
+Single implementation covering:
+  - plain in-batch negatives (DPR / GradAccum / GradCache): empty banks;
+  - ContAccum's extended similarity matrix (paper Eq. 5-7): dual banks;
+  - pre-batch negatives ablation: passage-only bank;
+  - cross-device negatives: columns are all-gathered across the DP axes and
+    each device reduces over its own rows (see core/dist.py).
+
+Row/column layout (global view):
+
+  rows    = [ global queries (B_g) ] ++ [ bank queries (Cq) ]
+  columns = [ global positives (B_g) ] ++ [ global hard negs (B_g*H) ]
+            ++ [ bank passages (Cp) ]
+
+Labels: global query i -> column i; bank query j -> column B_g*(1+H) + j.
+Invalid bank slots are masked exactly (warm-up phase). In distributed mode a
+device owns its local query rows plus a 1/D share of the (replicated) bank
+rows, so the psum over devices reproduces the global row sum exactly once.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import DistCtx
+from repro.core.infonce import NEG_INF
+from repro.core.memory_bank import BankState
+
+
+class LossAux(NamedTuple):
+    loss: jnp.ndarray          # global scalar loss (already psum'ed)
+    accuracy: jnp.ndarray      # global accuracy over valid rows
+    n_rows: jnp.ndarray        # global number of rows in the mean
+    n_negatives: jnp.ndarray   # valid columns - 1 (negatives per query)
+    q_global: jnp.ndarray      # gathered query reps (for bank push)
+    p_global: jnp.ndarray      # gathered positive-passage reps (for bank push)
+
+
+def contrastive_step_loss(
+    q_local: jnp.ndarray,
+    p_pos_local: jnp.ndarray,
+    p_hard_local: Optional[jnp.ndarray],
+    bank_q: Optional[BankState],
+    bank_p: Optional[BankState],
+    *,
+    temperature: float = 1.0,
+    ctx: Optional[DistCtx] = None,
+) -> tuple[jnp.ndarray, LossAux]:
+    """Returns (loss_dev, aux). ``loss_dev`` is this device's share of the
+    global loss: psum(loss_dev) == global loss; in single-device mode
+    loss_dev == global loss. Differentiate loss_dev, then psum the grads.
+    """
+    ctx = ctx or DistCtx()
+    b_local = q_local.shape[0]
+
+    # --- columns (gathered across DP axes) ---
+    p_pos = ctx.gather(p_pos_local)
+    cols = [p_pos]
+    if p_hard_local is not None and p_hard_local.shape[0] > 0:
+        cols.append(ctx.gather(p_hard_local))
+    b_g = p_pos.shape[0]
+    n_hard = 0 if len(cols) == 1 else cols[1].shape[0]
+
+    cq = 0 if bank_q is None else bank_q.buf.shape[0]
+    cp = 0 if bank_p is None else bank_p.buf.shape[0]
+    if cp > 0:
+        cols.append(bank_p.buf.astype(p_pos.dtype))
+    p_all = jnp.concatenate(cols, axis=0)
+
+    col_mask = jnp.ones((b_g + n_hard,), dtype=bool)
+    if cp > 0:
+        col_mask = jnp.concatenate([col_mask, bank_p.valid], axis=0)
+
+    # --- local rows: this device's queries ---
+    row_offset = ctx.shard_index() * b_local  # global index of local row 0
+    labels_local = row_offset + jnp.arange(b_local, dtype=jnp.int32)
+
+    def row_stats(q_rows, labels):
+        logits = jnp.einsum(
+            "md,nd->mn", q_rows, p_all, preferred_element_type=jnp.float32
+        ) / jnp.asarray(temperature, jnp.float32)
+        logits = jnp.where(col_mask[None, :], logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return lse - pos, correct
+
+    per_row_local, correct_local = row_stats(q_local, labels_local)
+    loss_sum = per_row_local.sum()
+    correct_sum = correct_local.sum()
+    n_rows_dev = jnp.asarray(b_local, jnp.float32)
+
+    # --- bank-query rows (replicated; each device takes a 1/D share) ---
+    if cq > 0 and cp > 0:
+        c_align = min(cq, cp)
+        labels_bank = (b_g + n_hard + jnp.arange(cq, dtype=jnp.int32)) % (
+            b_g + n_hard + cp
+        )
+        per_row_bank, correct_bank = row_stats(
+            bank_q.buf.astype(q_local.dtype), labels_bank
+        )
+        aligned = jnp.zeros((cq,), dtype=bool)
+        aligned = aligned.at[:c_align].set(bank_q.valid[:c_align] & bank_p.valid[:c_align])
+        w = aligned.astype(jnp.float32)
+        inv_d = 1.0 / ctx.device_count()
+        loss_sum = loss_sum + inv_d * jnp.sum(per_row_bank * w)
+        correct_sum = correct_sum + inv_d * jnp.sum(correct_bank * w)
+        n_rows_dev = n_rows_dev + inv_d * w.sum()
+
+    n_rows_g = jax.lax.stop_gradient(ctx.psum(n_rows_dev))
+    n_rows_g = jnp.maximum(n_rows_g, 1.0)
+    loss_dev = loss_sum / n_rows_g
+
+    aux = LossAux(
+        loss=jax.lax.stop_gradient(ctx.psum(loss_dev)),
+        accuracy=jax.lax.stop_gradient(ctx.psum(correct_sum) / n_rows_g),
+        n_rows=n_rows_g,
+        n_negatives=col_mask.sum().astype(jnp.float32) - 1.0,
+        q_global=jax.lax.stop_gradient(ctx.gather(q_local)),
+        p_global=jax.lax.stop_gradient(p_pos),
+    )
+    return loss_dev, aux

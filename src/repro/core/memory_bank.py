@@ -1,0 +1,94 @@
+"""Dual FIFO memory banks for ContAccum (paper Sec. 3.2, Fig. 2).
+
+Pure-functional ring buffers with static shapes so they live inside jitted
+train steps and checkpoints. ``valid`` masks make the warm-up phase (bank not
+yet full) exact: unfilled slots are excluded from the softmax and from the
+row mean — no approximation, no special cases in the loss.
+
+The *dual* structure (equal-size query and passage banks, pushed in lockstep)
+is the paper's core stability contribution: Sec. 3.3 shows that a
+passage-only bank (pre-batch negatives) yields a systematic gradient-norm
+imbalance between the two encoders.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BankState(NamedTuple):
+    buf: jnp.ndarray    # (capacity, d) stored representations
+    valid: jnp.ndarray  # (capacity,) bool — slot holds a real representation
+    head: jnp.ndarray   # () int32 — next write position (ring)
+    age: jnp.ndarray    # (capacity,) int32 — step counter at push time (diagnostics)
+
+
+def init_bank(capacity: int, dim: int, dtype=jnp.float32) -> BankState:
+    return BankState(
+        buf=jnp.zeros((capacity, dim), dtype=dtype),
+        valid=jnp.zeros((capacity,), dtype=bool),
+        head=jnp.zeros((), dtype=jnp.int32),
+        age=jnp.zeros((capacity,), dtype=jnp.int32),
+    )
+
+
+def push(bank: BankState, x: jnp.ndarray, step: jnp.ndarray | int = 0) -> BankState:
+    """Enqueue rows of ``x`` (n, d), dequeueing the oldest when full.
+
+    ``x`` is stored with stop_gradient: bank entries never carry activations
+    (paper Eq. 5-6, sg(.)). n may exceed capacity; the last ``capacity`` rows
+    win, matching FIFO semantics.
+    """
+    x = jax.lax.stop_gradient(x)
+    n = x.shape[0]
+    cap = bank.buf.shape[0]
+    if n == 0:
+        return bank
+    idx = (bank.head + jnp.arange(n, dtype=jnp.int32)) % cap
+    buf = bank.buf.at[idx].set(x.astype(bank.buf.dtype))
+    valid = bank.valid.at[idx].set(True)
+    age = bank.age.at[idx].set(jnp.asarray(step, dtype=jnp.int32))
+    head = (bank.head + n) % cap
+    return BankState(buf=buf, valid=valid, head=head, age=age)
+
+
+def clear(bank: BankState) -> BankState:
+    """Invalidate all slots (used by the 'w/o past encoder' ablation: banks are
+    cleared at every optimizer-update boundary so only current-encoder
+    representations are ever used)."""
+    return BankState(
+        buf=bank.buf,
+        valid=jnp.zeros_like(bank.valid),
+        head=jnp.zeros_like(bank.head),
+        age=jnp.zeros_like(bank.age),
+    )
+
+
+def n_valid(bank: BankState) -> jnp.ndarray:
+    return bank.valid.sum()
+
+
+def push_pair(
+    bank_q: BankState,
+    bank_p: BankState,
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    step: jnp.ndarray | int = 0,
+) -> Tuple[BankState, BankState]:
+    """Push query/passage representations in lockstep so ring positions align;
+    bank row i in M_q is always the query whose positive passage is bank row i
+    in M_p (required for the extended-loss label alignment)."""
+    assert q.shape[0] == p.shape[0], "dual banks must be pushed in lockstep"
+    return push(bank_q, q, step), push(bank_p, p, step)
+
+
+def ordered(bank: BankState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(buf, valid) rolled so index 0 is the oldest entry. Only needed by
+    diagnostics (similarity-mass, Appendix C) — the loss itself is
+    order-independent given aligned banks."""
+    cap = bank.buf.shape[0]
+    perm = (bank.head + jnp.arange(cap, dtype=jnp.int32)) % cap
+    return bank.buf[perm], bank.valid[perm]

@@ -1,0 +1,118 @@
+"""Shared types for the contrastive update builders."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory_bank import BankState
+
+
+class RetrievalBatch(NamedTuple):
+    """One global batch of training examples.
+
+    query:        pytree, leaves (B, ...)   — tokenized queries
+    passage_pos:  pytree, leaves (B, ...)   — the positive passage per query
+    passage_hard: pytree, leaves (B, H, ...) or None — H hard negatives/query
+    """
+
+    query: Any
+    passage_pos: Any
+    passage_hard: Optional[Any] = None
+
+
+class DualEncoder(NamedTuple):
+    """Abstract dual encoder. ``params`` is expected to be a dict with keys
+    'query' and 'passage' (may alias for shared towers); the encode fns take
+    the full params dict."""
+
+    init: Callable[..., Any]                       # (rng, ...) -> params
+    encode_query: Callable[[Any, Any], jnp.ndarray]    # (params, batch.query) -> (B, d)
+    encode_passage: Callable[[Any, Any], jnp.ndarray]  # (params, passages) -> (B, d)
+    rep_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ContrastiveConfig:
+    """Configuration of the contrastive update (paper Secs. 3.1-3.2).
+
+    method: one of 'dpr' (full batch), 'grad_accum', 'grad_cache', 'contaccum'.
+    accumulation_steps: K. Global batch B must be divisible by K.
+    bank_size: N_memory (equal for both banks unless overridden — the paper's
+        dual-bank symmetry; ``bank_size_q``/``bank_size_p`` override for the
+        pre-batch-negatives ablation).
+    reset_banks_each_update: 'w/o past encoder' ablation (Table 2).
+    use_query_bank: False reproduces pre-batch negatives (w/o M_q, Table 2).
+    """
+
+    method: str = "contaccum"
+    temperature: float = 1.0
+    accumulation_steps: int = 1
+    bank_size: int = 0
+    bank_size_q: Optional[int] = None
+    bank_size_p: Optional[int] = None
+    use_query_bank: bool = True
+    reset_banks_each_update: bool = False
+    grad_clip_norm: float = 2.0
+    bank_dtype: Any = jnp.float32
+    # Cross-device negatives: name(s) of mesh axes to all-gather representations
+    # over; None means single-device semantics.
+    dp_axis: Optional[Any] = None
+
+    def resolved_bank_sizes(self):
+        nq = self.bank_size if self.bank_size_q is None else self.bank_size_q
+        np_ = self.bank_size if self.bank_size_p is None else self.bank_size_p
+        if not self.use_query_bank:
+            nq = 0
+        return nq, np_
+
+
+class ContrastiveState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+    bank_q: BankState
+    bank_p: BankState
+
+
+class StepMetrics(NamedTuple):
+    loss: jnp.ndarray
+    accuracy: jnp.ndarray
+    grad_norm: jnp.ndarray
+    grad_norm_query: jnp.ndarray
+    grad_norm_passage: jnp.ndarray
+    grad_norm_ratio: jnp.ndarray  # ||grad_passage|| / ||grad_query|| (paper Fig. 5)
+    n_negatives: jnp.ndarray      # negatives per query row actually used
+    bank_fill_q: jnp.ndarray
+    bank_fill_p: jnp.ndarray
+
+
+def subtree_norm(grads: Any, key: str) -> jnp.ndarray:
+    from repro.common.treemath import tree_global_norm
+
+    if isinstance(grads, dict) and key in grads:
+        return tree_global_norm(grads[key])
+    return jnp.zeros(())
+
+
+def chunk_tree(tree: Any, k: int) -> Any:
+    """Reshape every leaf (B, ...) -> (K, B//K, ...)."""
+
+    def _r(x):
+        b = x.shape[0]
+        assert b % k == 0, f"global batch {b} not divisible by K={k}"
+        return x.reshape((k, b // k) + x.shape[1:])
+
+    return jax.tree_util.tree_map(_r, tree)
+
+
+def flatten_hard(hard: Any) -> Any:
+    """(B, H, ...) -> (B*H, ...) for encoding."""
+
+    def _f(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    return jax.tree_util.tree_map(_f, hard)

@@ -1,0 +1,3 @@
+"""Data substrates: deterministic synthetic corpora (offline container has no
+real datasets), DPR-format adapters, sharded loaders with checkpointable
+state, CSR neighbor sampling, criteo-like click logs."""

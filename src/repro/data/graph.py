@@ -1,0 +1,143 @@
+"""Graph data: deterministic synthetic graphs, CSR neighbor sampling (the
+real sampler required by the minibatch_lg cell), molecule batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray   # (N+1,)
+    indices: np.ndarray  # (E,)
+    feat: np.ndarray     # (N, F)
+    labels: np.ndarray   # (N,)
+    edge_dist: Optional[np.ndarray] = None  # (E,) distances aligned w/ indices
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.indices)
+
+
+def synthetic_graph(
+    n_nodes: int, avg_degree: int, d_feat: int, n_classes: int, seed: int = 0
+) -> CSRGraph:
+    """Deterministic scale-free-ish graph with community-correlated features."""
+    rng = np.random.default_rng(seed)
+    n_edges = n_nodes * avg_degree
+    # preferential-ish attachment: destinations biased toward low ids
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = (rng.pareto(1.5, n_edges) * n_nodes / 20).astype(np.int64) % n_nodes
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    labels = rng.integers(0, n_classes, n_nodes)
+    centers = rng.normal(size=(n_classes, d_feat))
+    feat = centers[labels] + rng.normal(scale=2.0, size=(n_nodes, d_feat))
+    dist = rng.uniform(0.5, 9.5, n_edges)
+    return CSRGraph(
+        indptr=indptr,
+        indices=dst.astype(np.int64),
+        feat=feat.astype(np.float32),
+        labels=labels.astype(np.int32),
+        edge_dist=dist.astype(np.float32),
+    )
+
+
+def to_edge_list(g: CSRGraph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(src, dst, dist) flat arrays — message direction src -> dst."""
+    src = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+    return g.indices.astype(np.int32), src.astype(np.int32), (
+        g.edge_dist if g.edge_dist is not None else np.ones(g.n_edges, np.float32)
+    )
+
+
+def sample_blocks(
+    g: CSRGraph, seeds: np.ndarray, fanouts: Sequence[int], rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Layer-wise uniform neighbor sampling (GraphSAGE-style), padded to the
+    static worst case so the jitted step never recompiles.
+
+    Returns (nodes, src, dst, edge_mask):
+      nodes: (max_nodes,) node ids (padded with 0); seeds first.
+      src/dst: (max_edges,) edge endpoints as *positions into nodes*.
+      edge_mask: (max_edges,) validity.
+    max_nodes = seeds*(1 + f1 + f1*f2 ...), max_edges = seeds*f1 + seeds*f1*f2 ...
+    """
+    frontier = np.asarray(seeds)
+    all_nodes: List[np.ndarray] = [frontier]
+    edge_src: List[np.ndarray] = []
+    edge_dst: List[np.ndarray] = []
+    # positions of current frontier within the node list
+    offset = 0
+    for fanout in fanouts:
+        new_nodes = np.empty(len(frontier) * fanout, np.int64)
+        src_pos = np.empty(len(frontier) * fanout, np.int64)
+        next_offset = offset + len(frontier)
+        for i, node in enumerate(frontier):
+            lo, hi = g.indptr[node], g.indptr[node + 1]
+            if hi > lo:
+                picks = g.indices[rng.integers(lo, hi, fanout)]
+            else:
+                picks = np.full(fanout, node)
+            new_nodes[i * fanout : (i + 1) * fanout] = picks
+            src_pos[i * fanout : (i + 1) * fanout] = offset + i
+        all_nodes.append(new_nodes)
+        # messages flow neighbor -> frontier node
+        edge_src.append(next_offset + np.arange(len(new_nodes)))
+        edge_dst.append(src_pos)
+        frontier = new_nodes
+        offset = next_offset
+
+    nodes = np.concatenate(all_nodes)
+    src = np.concatenate(edge_src)
+    dst = np.concatenate(edge_dst)
+    mask = np.ones(len(src), bool)
+    return nodes, src.astype(np.int32), dst.astype(np.int32), mask
+
+
+def block_sizes(n_seeds: int, fanouts: Sequence[int]) -> Tuple[int, int]:
+    """Static (max_nodes, max_edges) for the padded sampled block."""
+    n_nodes, n_edges, layer = n_seeds, 0, n_seeds
+    for f in fanouts:
+        layer *= f
+        n_nodes += layer
+        n_edges += layer
+    return n_nodes, n_edges
+
+
+def molecule_batch(
+    batch: int, n_atoms: int, n_edges_per: int, seed: int = 0
+) -> dict:
+    """Batched small molecules as one flat graph (graph_id pooling)."""
+    rng = np.random.default_rng(seed)
+    n = batch * n_atoms
+    e = batch * n_edges_per
+    src = np.empty(e, np.int32)
+    dst = np.empty(e, np.int32)
+    for b in range(batch):
+        s = rng.integers(0, n_atoms, n_edges_per) + b * n_atoms
+        d = rng.integers(0, n_atoms, n_edges_per) + b * n_atoms
+        src[b * n_edges_per : (b + 1) * n_edges_per] = s
+        dst[b * n_edges_per : (b + 1) * n_edges_per] = d
+    return {
+        "nodes": rng.integers(1, 20, n).astype(np.int32),
+        "src": src,
+        "dst": dst,
+        "edge_dist": rng.uniform(0.7, 9.0, e).astype(np.float32),
+        "node_mask": np.ones(n, bool),
+        "edge_mask": np.ones(e, bool),
+        "graph_id": np.repeat(np.arange(batch), n_atoms).astype(np.int32),
+        "n_graphs": batch,
+        "targets": rng.normal(size=batch).astype(np.float32),
+    }

@@ -1,0 +1,119 @@
+"""Retrieval training data.
+
+Two sources:
+  * ``SyntheticRetrievalCorpus`` — deterministic planted-relevance corpus:
+    each passage is a token sequence; its query is a noisy subsequence
+    (lexical signal a BERT-style encoder can learn); hard negatives share a
+    topic prefix with the positive. Used by tests and by the paper-table
+    benchmarks (the real NQ/TriviaQA/MS-Marco corpora are not
+    redistributable offline; see DESIGN.md §7.4).
+  * ``load_dpr_json`` — adapter for DPR-preprocessed JSON (queries with
+    positive_ctxs / hard_negative_ctxs), with a hashing tokenizer so the
+    pipeline runs without a vocab file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+
+def hash_tokenize(text: str, vocab_size: int, max_len: int, *, cls_id: int = 1) -> np.ndarray:
+    """Deterministic hashing tokenizer: word -> stable id in [10, vocab)."""
+    ids = [cls_id]
+    for w in text.lower().split()[: max_len - 1]:
+        ids.append(10 + (hash(w) & 0x7FFFFFFF) % (vocab_size - 10))
+    out = np.zeros((max_len,), np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+@dataclasses.dataclass
+class SyntheticRetrievalCorpus:
+    n_passages: int = 2048
+    vocab_size: int = 1000
+    q_len: int = 16
+    p_len: int = 32
+    n_topics: int = 32
+    n_hard: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # topic prefix (first 4 tokens) + content
+        self.topics = rng.integers(10, self.vocab_size, size=(self.n_topics, 4))
+        topic_of = rng.integers(0, self.n_topics, size=self.n_passages)
+        self.passages = np.zeros((self.n_passages, self.p_len), np.int32)
+        self.passages[:, 0] = 1  # CLS
+        self.passages[:, 1:5] = self.topics[topic_of]
+        self.passages[:, 5:] = rng.integers(
+            10, self.vocab_size, size=(self.n_passages, self.p_len - 5)
+        )
+        self.topic_of = topic_of
+        # queries: noisy subsequences of their positive passage
+        self.queries = np.zeros((self.n_passages, self.q_len), np.int32)
+        self.queries[:, 0] = 1
+        for i in range(self.n_passages):
+            take = rng.choice(
+                np.arange(1, self.p_len), size=self.q_len - 1, replace=False
+            )
+            q = self.passages[i, np.sort(take)].copy()
+            flip = rng.random(self.q_len - 1) < 0.1
+            q[flip] = rng.integers(10, self.vocab_size, size=int(flip.sum()))
+            self.queries[i, 1:] = q
+        # hard negatives: same topic, different passage
+        self.hard = np.zeros((self.n_passages, self.n_hard), np.int32)
+        for i in range(self.n_passages):
+            same = np.flatnonzero(topic_of == topic_of[i])
+            same = same[same != i]
+            if len(same) == 0:
+                same = np.array([(i + 1) % self.n_passages])
+            self.hard[i] = rng.choice(same, size=self.n_hard, replace=True)
+
+    def batch(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        """Assemble a RetrievalBatch-shaped dict of numpy arrays."""
+        return {
+            "query": self.queries[idx],
+            "passage_pos": self.passages[idx],
+            "passage_hard": self.passages[self.hard[idx]].reshape(
+                len(idx), self.n_hard, self.p_len
+            ),
+        }
+
+    def eval_split(self, n: int = 256) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(queries, all_passages, gold_passage_index) for top@k eval."""
+        idx = np.arange(self.n_passages - n, self.n_passages)
+        return self.queries[idx], self.passages, idx
+
+
+def load_dpr_json(
+    path: str, vocab_size: int, q_len: int = 32, p_len: int = 128, n_hard: int = 1
+) -> Dict[str, np.ndarray]:
+    """DPR-preprocessed JSON -> tokenized arrays (hashing tokenizer).
+
+    Schema per item: {"question": str, "positive_ctxs": [{"text": ...}],
+    "hard_negative_ctxs": [{"text": ...}]}. Items missing either list are
+    dropped (the paper trains only on queries having both)."""
+    with open(path) as f:
+        items = json.load(f)
+    qs, ps, hs = [], [], []
+    for it in items:
+        if not it.get("positive_ctxs") or not it.get("hard_negative_ctxs"):
+            continue
+        qs.append(hash_tokenize(it["question"], vocab_size, q_len))
+        ps.append(hash_tokenize(it["positive_ctxs"][0]["text"], vocab_size, p_len))
+        hard = [
+            hash_tokenize(c["text"], vocab_size, p_len)
+            for c in it["hard_negative_ctxs"][:n_hard]
+        ]
+        while len(hard) < n_hard:
+            hard.append(hard[-1])
+        hs.append(np.stack(hard))
+    return {
+        "query": np.stack(qs),
+        "passage_pos": np.stack(ps),
+        "passage_hard": np.stack(hs),
+    }

@@ -1,0 +1,21 @@
+from repro.distribution.sharding import (
+    ShardingRules,
+    LM_RULES,
+    BERT_RULES,
+    GNN_RULES,
+    RECSYS_RULES,
+    make_param_shardings,
+    spec_for_path,
+    dp_axes,
+)
+
+__all__ = [
+    "ShardingRules",
+    "LM_RULES",
+    "BERT_RULES",
+    "GNN_RULES",
+    "RECSYS_RULES",
+    "make_param_shardings",
+    "spec_for_path",
+    "dp_axes",
+]

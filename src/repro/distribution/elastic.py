@@ -1,0 +1,141 @@
+"""Elastic scaling: reshard checkpoints and data streams across mesh resizes.
+
+Two halves:
+
+  * **Weights/optimizer**: checkpoints are stored unsharded-on-host (per-leaf
+    npy), so weight resharding is free — restore with the new mesh's sharding
+    tree. What needs care is *shape-coupled* state: ContAccum's memory banks
+    (capacity may change with the new memory budget) and batch-shaped
+    accumulators. ``reshard_bank`` grows/shrinks a FIFO bank preserving the
+    newest entries in order.
+
+  * **Data stream**: the loader's index stream is keyed by (seed, epoch) and
+    partitioned by host_id::n_hosts strides (data/loader.py), so resuming
+    with a different host count replays the SAME global sample sequence —
+    no skipped or duplicated examples across a resize (tested in
+    tests/test_runtime.py::test_elastic_loader_resize).
+
+``plan_resize`` computes the new DP/TP layout for a device-count change and
+validates divisibility of every global batch in flight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.memory_bank import BankState
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    n_devices: int
+    dp: int
+    tp: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.dp, self.tp)
+
+
+def plan_resize(
+    n_devices: int,
+    *,
+    global_batch: int,
+    tp: Optional[int] = None,
+    max_tp: int = 16,
+) -> MeshPlan:
+    """Pick (dp, tp) for a new device count.
+
+    TP is kept at the old value when it still divides; otherwise the largest
+    power-of-two tp <= max_tp that divides n_devices. DP must divide the
+    global batch (the batch is NOT rescaled on resize — learning dynamics are
+    preserved; per-device batch changes instead)."""
+    # candidate tp values: every divisor of n_devices up to max_tp, the
+    # requested tp first, then descending (keep model-parallel capacity)
+    divisors = [t for t in range(1, max_tp + 1) if n_devices % t == 0]
+    candidates = sorted(
+        divisors, key=lambda t: (t != tp, -t)
+    )
+    for t in candidates:
+        dp = n_devices // t
+        if global_batch % dp == 0:
+            return MeshPlan(n_devices=n_devices, dp=dp, tp=t)
+    raise ValueError(
+        f"no (dp, tp<= {max_tp}) layout of {n_devices} devices divides "
+        f"global batch {global_batch}; choose a batch-compatible mesh"
+    )
+
+
+def reshard_bank(bank_arrays: Dict[str, np.ndarray], new_capacity: int) -> Dict[str, np.ndarray]:
+    """Resize a FIFO bank (host-side np arrays from a checkpoint), keeping the
+    newest entries. Returned arrays encode a ring with head at the next write
+    position, oldest-first layout (head = n_kept % capacity when not full).
+    """
+    buf, valid, head, age = (
+        bank_arrays["buf"],
+        bank_arrays["valid"],
+        int(bank_arrays["head"]),
+        bank_arrays["age"],
+    )
+    cap, d = buf.shape
+    # order oldest -> newest, keep only valid
+    perm = (head + np.arange(cap)) % cap
+    buf_o, valid_o, age_o = buf[perm], valid[perm], age[perm]
+    keep = np.flatnonzero(valid_o)
+    buf_o, age_o = buf_o[keep], age_o[keep]
+    n_keep = min(len(buf_o), new_capacity)
+    buf_o, age_o = buf_o[len(buf_o) - n_keep:], age_o[len(age_o) - n_keep:]
+
+    new_buf = np.zeros((new_capacity, d), buf.dtype)
+    new_valid = np.zeros((new_capacity,), bool)
+    new_age = np.zeros((new_capacity,), age.dtype)
+    new_buf[:n_keep] = buf_o
+    new_valid[:n_keep] = True
+    new_age[:n_keep] = age_o
+    new_head = n_keep % new_capacity if n_keep < new_capacity else 0
+    return {
+        "buf": new_buf,
+        "valid": new_valid,
+        "head": np.asarray(new_head, np.int32),
+        "age": new_age,
+    }
+
+
+def bank_to_arrays(bank: BankState) -> Dict[str, np.ndarray]:
+    return {
+        "buf": np.asarray(bank.buf),
+        "valid": np.asarray(bank.valid),
+        "head": np.asarray(bank.head),
+        "age": np.asarray(bank.age),
+    }
+
+
+def arrays_to_bank(arrs: Dict[str, np.ndarray]) -> BankState:
+    import jax.numpy as jnp
+
+    return BankState(
+        buf=jnp.asarray(arrs["buf"]),
+        valid=jnp.asarray(arrs["valid"]),
+        head=jnp.asarray(arrs["head"], jnp.int32),
+        age=jnp.asarray(arrs["age"], jnp.int32),
+    )
+
+
+def reshard_state_banks(state, new_capacity_q: int, new_capacity_p: int):
+    """ContrastiveState -> ContrastiveState with resized dual banks (the
+    elastic-resize path for the paper's method; dual symmetry is preserved by
+    resizing both banks together)."""
+    from repro.core.types import ContrastiveState
+
+    bq = arrays_to_bank(reshard_bank(bank_to_arrays(state.bank_q), new_capacity_q))
+    bp = arrays_to_bank(reshard_bank(bank_to_arrays(state.bank_p), new_capacity_p))
+    return ContrastiveState(
+        step=state.step,
+        params=state.params,
+        opt_state=state.opt_state,
+        bank_q=bq,
+        bank_p=bp,
+    )

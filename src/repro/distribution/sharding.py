@@ -1,0 +1,177 @@
+"""Logical sharding rules: parameter-path regex -> PartitionSpec.
+
+Models stay sharding-agnostic; these tables encode the parallelism plan:
+
+  * DP    : batch over ("pod", "data") (pure DP across pods).
+  * FSDP  : weights additionally sharded over "data" on the non-TP dim
+            (ZeRO-3; XLA all-gathers at use). Required for the >=100B configs.
+  * TP    : Megatron tensor parallel over "model" — attention q-heads, FFN
+            hidden, vocab/lm_head, expert dim (=EP for MoE), embedding-table
+            rows (recsys).
+  * GQA   : kv projections with kv_heads < |model| are sharded over "model"
+            on the *weight* only (FSDP-style); activations keep kv heads
+            replicated, so attention runs without resharding.
+  * SP    : (hillclimb lever) sequence dim of the residual stream over
+            "model" between blocks.
+
+Divisibility across all five LM configs x mesh (16,16)/(2,16,16) is asserted
+in tests/test_sharding.py.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+ShardingRules = List[Tuple[str, P]]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes for a mesh: ("pod","data") or ("data",)."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+# ---------------------------------------------------------------- LM family
+# paths look like: layers/attn/wq, layers/ffn/w_gate, embed, lm_head, ...
+LM_RULES: ShardingRules = [
+    # patterns use (^|/) anchors so they also match inside optimizer-state
+    # subtrees (e.g. "1/mu/layers/attn/wq") — moments shard like their params.
+    (r"(^|/)embed$", P("model", "data")),                 # (V, d): vocab TP, d FSDP
+    (r"(^|/)lm_head$", P("data", "model")),               # (d, V)
+    (r"(^|/)final_norm$", P()),
+    (r"(^|/)layers/ln\d$", P(None, None)),
+    (r"(^|/)layers/attn/wq$", P(None, "data", "model")),  # (L, d, H*dh)
+    (r"(^|/)layers/attn/wk$", P(None, "data", "model")),  # weight-only TP (GQA)
+    (r"(^|/)layers/attn/wv$", P(None, "data", "model")),
+    (r"(^|/)layers/attn/wo$", P(None, "model", "data")),  # (L, H*dh, d)
+    (r"(^|/)layers/attn/b[qkv]$", P(None, "model")),
+    (r"(^|/)layers/ffn/router$", P(None, None, None)),    # (L, d, E) small
+    # MoE expert weights: EP over "model", FSDP over "data" on the
+    # contraction dim. §Perf C2 tried FSDP on the OUTPUT dim (hoping for
+    # ZeRO-3 weight all-gathers) — measured 1.9x WORSE: GSPMD all-gathered
+    # the xe activations instead because the output-dim "data" placement
+    # conflicts with the data-sharded group dim. Refuted; kept as-is.
+    (r"(^|/)layers/ffn/w_gate$", P(None, "model", "data", None)),  # (L,E,d,f)
+    (r"(^|/)layers/ffn/w_up$", P(None, "model", "data", None)),
+    (r"(^|/)layers/ffn/w_down$", P(None, "model", None, "data")),  # (L,E,f,d)
+]
+# dense-FFN overrides (3D leaves share names with MoE 4D ones; resolved by rank)
+LM_DENSE_FFN = [
+    (r"(^|/)layers/ffn/w_gate$", P(None, "data", "model")),   # (L, d, ff)
+    (r"(^|/)layers/ffn/w_up$", P(None, "data", "model")),
+    (r"(^|/)layers/ffn/w_down$", P(None, "model", "data")),   # (L, ff, d)
+]
+
+# ------------------------------------------------------------- BERT dual tower
+BERT_RULES: ShardingRules = [
+    (r"embed/word$", P("model", None)),
+    (r"embed/(pos|type)$", P(None, None)),
+    (r"embed/ln_[sb]$", P()),
+    (r"layers/wqkv$", P(None, "data", "model")),
+    (r"layers/wo$", P(None, "model", "data")),
+    (r"layers/w1$", P(None, "data", "model")),
+    (r"layers/w2$", P(None, "model", "data")),
+    (r"layers/(b1)$", P(None, "model")),
+    (r"layers/(bqkv|bo|b2|ln\d_[sb])$", P(None, None)),
+]
+
+# ------------------------------------------------------------------ GNN
+GNN_RULES: ShardingRules = [
+    (r".*", P()),  # SchNet is tiny (~100k params): replicate everything
+]
+
+# ---------------------------------------------------------------- recsys
+# The stacked table is row-sharded over BOTH in-pod axes: dlrm-mlperf is
+# 188M rows x 128 = 96 GB fp32; over "model" alone (16) that is 6 GB of
+# params + 12 GB of Adam moments per chip — over the 16 GB v5e budget.
+# 256-way row sharding brings the table memory to ~1.1 GB/chip total.
+RECSYS_RULES: ShardingRules = [
+    (r"(^|/)table$", P(("model", "data"), None)),  # row-sharded embedding table
+    (r"(^|/)w_first$", P(("model", "data"))),      # DeepFM first-order weights
+    (r".*", P()),                                  # MLPs replicated (small)
+]
+
+
+def _path_key(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def spec_for_path(key: str, leaf, rules: ShardingRules, dense_ffn: bool = False) -> P:
+    if dense_ffn and np.ndim(leaf) == 3:
+        for pattern, spec in LM_DENSE_FFN:
+            if re.search(pattern, key):
+                return spec
+    for pattern, spec in rules:
+        if re.search(pattern, key):
+            # drop trailing spec axes beyond the leaf's rank
+            if len(spec) > np.ndim(leaf):
+                spec = P(*tuple(spec)[: np.ndim(leaf)])
+            return spec
+    return P()
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def validate_spec(mesh: Mesh, spec: P, shape: Sequence[int], key: str = "") -> P:
+    """Drop axes that do not divide (with a loud comment trail in tests);
+    production rule tables are divisibility-checked in tests, this is the
+    runtime safety net for ad-hoc configs."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            fixed.append(None)
+            continue
+        n = _mesh_axis_size(mesh, axis)
+        fixed.append(axis if dim % n == 0 else None)
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return P(*fixed)
+
+
+def make_param_shardings(
+    mesh: Mesh, params: Any, rules: ShardingRules, *, dense_ffn: bool = False
+) -> Any:
+    """Pytree of NamedShardings matching ``params``; multi-pod meshes reuse the
+    same rules (pod is a pure-DP axis and never appears in weight specs)."""
+
+    def per_leaf(path, leaf):
+        key = _path_key(path)
+        spec = spec_for_path(key, leaf, rules, dense_ffn=dense_ffn)
+        spec = validate_spec(mesh, spec, np.shape(leaf), key)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def make_spec_tree(mesh: Mesh, params: Any, rules: ShardingRules, *, dense_ffn: bool = False):
+    """Like make_param_shardings but returns raw PartitionSpecs (for jit
+    in_shardings where the tree contains ShapeDtypeStructs)."""
+
+    def per_leaf(path, leaf):
+        key = _path_key(path)
+        spec = spec_for_path(key, leaf, rules, dense_ffn=dense_ffn)
+        return validate_spec(mesh, spec, np.shape(leaf), key)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)

@@ -1,0 +1,42 @@
+"""Retrieval evaluation: exact Top@k over a corpus (the paper's metric)."""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import DualEncoder
+
+
+def encode_corpus(enc: DualEncoder, params, passages: np.ndarray, batch: int = 256):
+    reps = []
+    for lo in range(0, len(passages), batch):
+        reps.append(np.asarray(
+            enc.encode_passage(params, jnp.asarray(passages[lo:lo + batch]))
+        ))
+    return np.concatenate(reps)
+
+
+def evaluate_topk(
+    enc: DualEncoder,
+    params,
+    corpus,
+    ks: Sequence[int] = (1, 5, 20),
+) -> Dict[str, float]:
+    """Exact retrieval eval over the whole corpus (paper's Top@k): corpus must
+    expose ``eval_split() -> (queries, passages, gold_idx)``."""
+    queries, passages, gold = corpus.eval_split(
+        n=min(256, corpus.n_passages // 4)
+    )
+    q = np.asarray(enc.encode_query(params, jnp.asarray(queries)))
+    p = encode_corpus(enc, params, passages)
+    scores = q @ p.T
+    order = np.argsort(-scores, axis=1)
+    return {
+        f"top@{k}": float(np.mean([
+            gold[i] in order[i, :k] for i in range(len(gold))
+        ]))
+        for k in ks
+    }

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the embedding-bag kernel: gather + segment_sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,    # (V, D)
+    indices: jnp.ndarray,  # (L,) int32 rows to gather
+    bag_ids: jnp.ndarray,  # (L,) int32 sorted non-decreasing bag assignment
+    n_bags: int,
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel: materializes full scores."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, Hk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    kv_mask: Optional[jnp.ndarray] = None,  # (B, Skv)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    group = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where((ki <= qi)[None, None], logits, NEG_INF)
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vr)

@@ -1,0 +1,224 @@
+"""Blocked InfoNCE Pallas TPU kernels (the paper's softmax-cost hot spot).
+
+The (M, N) similarity matrix of ContAccum's extended batch
+(M, N ~ N_local + N_memory, up to 128k columns at pod scale) never touches
+HBM: the forward kernel streams (block_m x block_n) tiles through VMEM with
+an online-softmax accumulator (running max / sum-exp scratch), extracting the
+positive logit when the row's label falls inside the current column block.
+The backward kernels recompute tiles and emit dQ / dP with the same blocking.
+
+Grid layout (fwd, dq): (M/bm, N/bn), N innermost so per-row scratch carries
+across column blocks; output rows are revisited — final values written on the
+last column step. dp uses the transposed grid (N/bn, M/bm).
+
+MXU alignment: block_m/block_n default 128 (fp32 lane width 8x128; the matmul
+tiles are 128x128). d (the contraction dim) is loaded whole per tile —
+rep_dim <= 8192 fits VMEM comfortably (128 x 8192 x 4B = 4 MiB per operand).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(labels_ref, q_ref, p_ref, lse_ref, pos_ref, m_scr, l_scr, *, inv_tau, bm, bn, n_blocks):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+    s = jax.lax.dot_general(
+        q_ref[...],
+        p_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inv_tau  # (bm, bn)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.exp(s - m_new[:, None]).sum(axis=-1)
+    m_scr[...] = m_new
+
+    # positive logit: label inside this column block?
+    # (scalar-prefetch operands arrive unblocked: slice this row block)
+    lbl = labels_ref[pl.ds(i * bm, bm)]
+    col0 = j * bn
+    local = lbl - col0
+    in_blk = (local >= 0) & (local < bn)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == local[:, None]
+    ).astype(jnp.float32)
+    pos_j = (s * onehot).sum(axis=-1)
+    pos_ref[...] = jnp.where(in_blk, pos_j, pos_ref[...])
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        lse_ref[...] = m_scr[...] + jnp.log(l_scr[...])
+
+
+def fused_infonce_fwd(
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    inv_tau: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Returns (lse, pos) per row; loss = mean(lse - pos)."""
+    m, d = q.shape
+    n, _ = p.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
+    grid = (m // block_m, n // block_n)
+
+    kernel = functools.partial(
+        _fwd_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n, n_blocks=grid[1]
+    )
+    lse, pos = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
+                pl.BlockSpec((block_n, d), lambda i, j, labels: (j, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_m,), jnp.float32),
+                pltpu.VMEM((block_m,), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(labels.astype(jnp.int32), q, p)
+    return lse, pos
+
+
+def _coeff(s, lse_rows, labels, col0, bn, g_lse, g_pos):
+    """Per-tile cotangent of the logits: prob * g_lse + onehot * g_pos."""
+    prob = jnp.exp(s - lse_rows[:, None])
+    local = labels - col0
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == local[:, None]
+    ).astype(jnp.float32)
+    return prob * g_lse[:, None] + onehot * g_pos[:, None]
+
+
+def _dq_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dq_ref, *, inv_tau, bm, bn):
+    """dQ = sum over column blocks of coeff @ P * inv_tau."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    s = jax.lax.dot_general(
+        q_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inv_tau
+    coeff = _coeff(s, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn, bn,
+                   glse_ref[...], gpos_ref[...]) * inv_tau
+    dq_ref[...] += jax.lax.dot_general(
+        coeff.astype(p_ref.dtype), p_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(dq_ref.dtype)
+
+
+def _dp_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dp_ref, *, inv_tau, bm, bn):
+    """dP = sum over row blocks of coeff^T @ Q * inv_tau.
+    Grid: (N/bn, M/bm) — column blocks outer, row blocks inner (accumulated)."""
+    i = pl.program_id(1)
+    j = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dp_ref[...] = jnp.zeros_like(dp_ref)
+
+    s = jax.lax.dot_general(
+        q_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inv_tau  # (bm, bn)
+    coeff = _coeff(s, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn, bn,
+                   glse_ref[...], gpos_ref[...]) * inv_tau
+    dp_ref[...] += jax.lax.dot_general(
+        coeff.astype(q_ref.dtype), q_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(dp_ref.dtype)
+
+
+def fused_infonce_bwd(
+    q, p, labels, lse, g_lse, g_pos,
+    *,
+    inv_tau: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Exact VJP given the per-row cotangents of (lse, pos)."""
+    m, d = q.shape
+    n, _ = p.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    grid_q = (m // block_m, n // block_n)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid_q,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
+                pl.BlockSpec((block_n, d), lambda i, j, labels: (j, 0)),
+                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+            ],
+            out_specs=pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(labels.astype(jnp.int32), q, p, lse, g_lse, g_pos)
+
+    grid_p = (n // block_n, m // block_m)
+    dp = pl.pallas_call(
+        functools.partial(_dp_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid_p,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda j, i, labels: (i, 0)),
+                pl.BlockSpec((block_n, d), lambda j, i, labels: (j, 0)),
+                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
+                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
+                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
+            ],
+            out_specs=pl.BlockSpec((block_n, d), lambda j, i, labels: (j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(labels.astype(jnp.int32), q, p, lse, g_lse, g_pos)
+
+    return dq.astype(q.dtype), dp.astype(p.dtype)

@@ -1,0 +1,68 @@
+"""Jitted public API for the fused InfoNCE kernel with a custom VJP.
+
+``fused_infonce_loss(q, p, labels)`` = mean_i (lse_i - pos_i), computed
+without materializing the (M, N) similarity matrix in either direction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_infonce.fused_infonce import (
+    fused_infonce_bwd,
+    fused_infonce_fwd,
+)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def fused_infonce_rows(q, p, labels, inv_tau=1.0, block_m=128, block_n=128, interpret=True):
+    """(lse, pos) per row. Differentiable w.r.t. q and p."""
+    return fused_infonce_fwd(
+        q, p, labels, inv_tau=inv_tau, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+
+
+def _rows_fwd(q, p, labels, inv_tau, block_m, block_n, interpret):
+    lse, pos = fused_infonce_fwd(
+        q, p, labels, inv_tau=inv_tau, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    return (lse, pos), (q, p, labels, lse)
+
+
+def _rows_bwd(inv_tau, block_m, block_n, interpret, res, cotangents):
+    q, p, labels, lse = res
+    g_lse, g_pos = cotangents
+    dq, dp = fused_infonce_bwd(
+        q, p, labels, lse, g_lse, g_pos,
+        inv_tau=inv_tau, block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return dq, dp, None
+
+
+fused_infonce_rows.defvjp(_rows_fwd, _rows_bwd)
+
+
+def fused_infonce_loss(
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    labels: Optional[jnp.ndarray] = None,
+    *,
+    temperature: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+):
+    """Mean InfoNCE over rows. ``interpret=True`` runs the kernel body on CPU
+    (this container); on TPU pass interpret=False."""
+    if labels is None:
+        labels = jnp.arange(q.shape[0], dtype=jnp.int32)
+    lse, pos = fused_infonce_rows(
+        q, p, labels, 1.0 / temperature, block_m, block_n, interpret
+    )
+    return jnp.mean(lse - pos)

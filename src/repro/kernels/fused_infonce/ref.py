@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused InfoNCE kernel.
+
+Returns per-row (lse, pos_logit); loss = mean(lse - pos). Materializes the
+full (M, N) similarity matrix — exactly what the kernel avoids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def infonce_rows_ref(q: jnp.ndarray, p: jnp.ndarray, labels: jnp.ndarray, *, inv_tau: float = 1.0):
+    logits = (
+        jnp.einsum("md,nd->mn", q, p, preferred_element_type=jnp.float32) * inv_tau
+    )
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse, pos
+
+
+def infonce_loss_ref(q, p, labels, *, inv_tau: float = 1.0):
+    lse, pos = infonce_rows_ref(q, p, labels, inv_tau=inv_tau)
+    return jnp.mean(lse - pos)
+
+
+def infonce_grads_ref(q, p, labels, *, inv_tau: float = 1.0):
+    return jax.grad(
+        lambda q_, p_: infonce_loss_ref(q_, p_, labels, inv_tau=inv_tau), argnums=(0, 1)
+    )(q, p)

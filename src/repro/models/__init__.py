@@ -1,0 +1,9 @@
+"""Functional model zoo.
+
+Every model is a pair of pure functions:
+  ``init(rng, cfg) -> params``  (plain nested dicts of jnp arrays)
+  ``apply(params, cfg, ...) -> outputs``
+
+Sharding metadata is *path-based*: distribution/sharding.py maps parameter
+path regexes to logical axes, so models stay sharding-agnostic.
+"""

@@ -1,0 +1,78 @@
+"""Shared primitive layers (pure functions over explicit param dicts)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, *, scale: Optional[float] = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)
+
+
+def linear(params, x, *, bias_key: str = "b", weight_key: str = "w"):
+    y = x @ params[weight_key]
+    if bias_key in params:
+        y = y + params[bias_key]
+    return y
+
+
+def layer_norm(scale, bias, x, *, eps: float = 1e-12):
+    """LayerNorm in fp32 (bf16-safe), matching BERT's eps."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_norm(scale, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def shifted_softplus(x):
+    """SchNet's activation: ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - math.log(2.0)
+
+
+def dropout(rng, x, rate: float, deterministic: bool):
+    if deterministic or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def rotary_embedding(positions, head_dim: int, theta: float = 10000.0, dtype=jnp.float32):
+    """(..., seq) int positions -> (..., seq, head_dim/2) cos & sin."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x, cos, sin):
+    """x: (..., S, H, D). cos/sin: (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,74 @@
+"""Dual-encoder wrappers binding backbones to the core DualEncoder interface.
+
+The paper's retriever is two BERTs ([CLS] pooling); the LM-retriever variant
+(GTR/E5 style) wraps a causal-LM backbone with mean pooling. Both produce
+``params = {"query": ..., "passage": ...}`` so the core methods' gradient
+-norm diagnostics (Fig. 5) apply uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import DualEncoder
+from repro.models.bert import BertConfig, bert_encode, init_bert
+from repro.models.lm import LMConfig, encode_pooled, init_lm
+
+
+def _as_tokens(batch):
+    """Batches may be {'tokens': ..., 'mask': ...} dicts or raw token arrays."""
+    if isinstance(batch, dict):
+        return batch["tokens"], batch.get("mask")
+    return batch, None
+
+
+def make_bert_dual_encoder(cfg: BertConfig, *, shared: bool = False) -> DualEncoder:
+    def init(rng):
+        kq, kp = jax.random.split(rng)
+        q = init_bert(kq, cfg)
+        p = q if shared else init_bert(kp, cfg)
+        return {"query": q, "passage": p}
+
+    def encode_query(params, batch):
+        tokens, mask = _as_tokens(batch)
+        return bert_encode(params["query"], cfg, tokens, mask)
+
+    def encode_passage(params, batch):
+        tokens, mask = _as_tokens(batch)
+        return bert_encode(params["passage"], cfg, tokens, mask)
+
+    return DualEncoder(
+        init=init,
+        encode_query=encode_query,
+        encode_passage=encode_passage,
+        rep_dim=cfg.d_model,
+    )
+
+
+def make_lm_dual_encoder(cfg: LMConfig, *, shared: bool = True) -> DualEncoder:
+    """LM-as-retriever: one shared causal-LM backbone (the common modern
+    setup), mean pooling over valid positions."""
+
+    def init(rng):
+        kq, kp = jax.random.split(rng)
+        q = init_lm(kq, cfg)
+        p = q if shared else init_lm(kp, cfg)
+        return {"query": q, "passage": p}
+
+    def encode_query(params, batch):
+        tokens, mask = _as_tokens(batch)
+        return encode_pooled(params["query"], cfg, tokens, mask)
+
+    def encode_passage(params, batch):
+        tokens, mask = _as_tokens(batch)
+        return encode_pooled(params["passage"], cfg, tokens, mask)
+
+    return DualEncoder(
+        init=init,
+        encode_query=encode_query,
+        encode_passage=encode_passage,
+        rep_dim=cfg.d_model,
+    )

@@ -1,0 +1,14 @@
+from repro.optim.adamw import adamw, sgd, apply_updates, clip_by_global_norm, chain, GradientTransformation
+from repro.optim.schedules import linear_warmup_linear_decay, constant_schedule, cosine_decay
+
+__all__ = [
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "clip_by_global_norm",
+    "chain",
+    "GradientTransformation",
+    "linear_warmup_linear_decay",
+    "constant_schedule",
+    "cosine_decay",
+]

@@ -1,0 +1,153 @@
+"""AdamW + gradient clipping, implemented natively (optax is not available in
+this offline environment). The interface mirrors optax's
+``GradientTransformation`` so the rest of the framework is insulated from the
+implementation.
+
+Paper hyperparameters (Appendix B): AdamW, lr 2e-5, eps 1e-8, weight decay 0,
+global-norm clip 2.0, linear warmup + linear decay.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.treemath import tree_global_norm
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray  # () int32
+    mu: Any             # first moment (params-shaped, fp32)
+    nu: Any             # second moment (params-shaped, fp32)
+
+
+def adamw(
+    learning_rate: Union[float, Callable],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask: Optional[Callable[[Any], Any]] = None,
+    moment_dtype=jnp.float32,
+) -> GradientTransformation:
+    """AdamW with configurable-moment-dtype (mixed-precision safe).
+
+    ``mask(params)`` may return a pytree of bools selecting which leaves get
+    weight decay (e.g. exclude LayerNorm/bias, the BERT convention).
+    ``moment_dtype=bf16`` halves optimizer-state HBM for the 100B+ configs
+    (momentum quantization; the accumulation arithmetic stays fp32).
+    """
+
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=moment_dtype), params
+        )
+        nu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=moment_dtype), params
+        )
+        return AdamWState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        count = state.count + 1
+        lr = learning_rate(count) if callable(learning_rate) else learning_rate
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (
+                b1 * m.astype(jnp.float32) + (1.0 - b1) * g.astype(jnp.float32)
+            ).astype(moment_dtype),
+            state.mu,
+            grads,
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: (
+                b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g.astype(jnp.float32))
+            ).astype(moment_dtype),
+            state.nu,
+            grads,
+        )
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        if mask is not None and params is not None:
+            wd_mask = mask(params)
+        else:
+            wd_mask = jax.tree_util.tree_map(lambda _: True, params)
+
+        def leaf_update(m, v, p, use_wd):
+            m = m.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + jnp.where(use_wd, weight_decay, 0.0) * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(leaf_update, mu, nu, params, wd_mask)
+        return updates, AdamWState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init=init, update=update)
+
+
+def sgd(learning_rate: Union[float, Callable]) -> GradientTransformation:
+    """Plain SGD. Used by identity tests (AdamW's sign-like step-1 update
+    amplifies fp-level gradient noise, making post-update param comparison
+    ill-conditioned)."""
+
+    def init(params):
+        del params
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params=None):
+        del params
+        count = state + 1
+        lr = learning_rate(count) if callable(learning_rate) else learning_rate
+        updates = jax.tree_util.tree_map(lambda g: (-lr * g).astype(g.dtype), grads)
+        return updates, count
+
+    return GradientTransformation(init=init, update=update)
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ClipState()
+
+    def update(grads, state, params=None):
+        del params
+        norm = tree_global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        clipped = jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads)
+        return clipped, state
+
+    return GradientTransformation(init=init, update=update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like optax.chain)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,44 @@
+"""Gradient compression with error feedback for the DP all-reduce.
+
+At pod scale the contrastive methods are gradient-all-reduce-bound between
+pods (110M-2B dense params / step). Compressing the all-reduced gradients to
+bf16 halves the "pod" axis (DCN) traffic; the residual (fp32 - bf16) is fed
+back into the next step so the compression error does not accumulate
+(error-feedback SGD, Seide et al. / Karimireddy et al.). Exactness
+degradation and error-feedback recovery are tested.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # params-shaped fp32
+
+
+def init_error_feedback(params: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    )
+
+
+def compress_with_feedback(
+    grads: Any, state: ErrorFeedbackState, dtype=jnp.bfloat16
+) -> Tuple[Any, ErrorFeedbackState]:
+    """Returns (compressed grads ready for the all-reduce, new residual)."""
+
+    def leaf(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = corrected.astype(dtype)
+        return q, corrected - q.astype(jnp.float32)
+
+    pairs = jax.tree_util.tree_map(leaf, grads, state.residual)
+    q = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, ErrorFeedbackState(residual=r)

@@ -1,0 +1,46 @@
+"""Learning-rate schedules.
+
+The paper (Appendix B) uses linear warmup (1,237 steps) followed by linear
+decay to zero — implemented here as ``linear_warmup_linear_decay``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+
+    return schedule
+
+
+def linear_warmup_linear_decay(peak_lr: float, warmup_steps: int, total_steps: int):
+    """Paper's schedule: 0 -> peak over ``warmup_steps``, then linearly to 0 at
+    ``total_steps``."""
+    warmup_steps = max(int(warmup_steps), 1)
+    total_steps = max(int(total_steps), warmup_steps + 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = step / warmup_steps
+        decay = (total_steps - step) / float(total_steps - warmup_steps)
+        frac = jnp.where(step < warmup_steps, warm, decay)
+        return peak_lr * jnp.clip(frac, 0.0, 1.0)
+
+    return schedule
+
+
+def cosine_decay(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.0):
+    warmup_steps = max(int(warmup_steps), 1)
+    total_steps = max(int(total_steps), warmup_steps + 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = step / warmup_steps
+        prog = jnp.clip((step - warmup_steps) / (total_steps - warmup_steps), 0.0, 1.0)
+        cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

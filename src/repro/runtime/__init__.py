@@ -1,0 +1,20 @@
+"""Runtime layer: fault-tolerant trainer + batched retrieval server."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig, TrainerReport, StepFailure
+from repro.runtime.server import (
+    BatchingServer,
+    blocked_topk_scores,
+    build_index,
+    make_retrieval_server,
+)
+
+__all__ = [
+    "Trainer",
+    "TrainerConfig",
+    "TrainerReport",
+    "StepFailure",
+    "BatchingServer",
+    "blocked_topk_scores",
+    "build_index",
+    "make_retrieval_server",
+]

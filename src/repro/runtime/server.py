@@ -1,0 +1,197 @@
+"""Batched retrieval serving: the inference half of the framework.
+
+Dense-retrieval serving has two phases (mirroring the paper's task):
+
+  * **Offline corpus build** — encode every passage with the passage tower in
+    fixed-size batches (`build_index`), store the matrix. At pod scale the
+    batch is sharded over the DP axes like training.
+  * **Online query serving** — a `RequestQueue` + `BatchingServer` pair:
+    requests arrive singly, the server coalesces them up to ``max_batch`` or
+    ``max_wait_s`` (classic dynamic batching), encodes with the query tower,
+    and scores against the index with an exact blocked top-k (the FAISS exact
+    path the paper uses, expressed as a jit-compiled matmul+top_k so it also
+    serves the recsys ``retrieval_cand`` shape).
+
+Fault-tolerance notes: the server is stateless between batches — a restart
+replays only in-flight requests (callers time out and retry); the index is a
+checkpointed artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------- exact top-k
+def blocked_topk_scores(
+    query_reps: jnp.ndarray,      # (Q, d)
+    index: jnp.ndarray,           # (N, d)
+    k: int,
+    *,
+    block: int = 65536,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k by blocked matmul + running merge — never materializes the
+    full (Q, N) score matrix. Returns (scores (Q, k), ids (Q, k))."""
+    n = index.shape[0]
+    block = min(block, n)
+    n_blocks = (n + block - 1) // block
+    pad = n_blocks * block - n
+    if pad:
+        index = jnp.pad(index, ((0, pad), (0, 0)))
+    blocks = index.reshape(n_blocks, block, -1)
+
+    def body(carry, inp):
+        best_s, best_i = carry
+        blk, b0 = inp
+        s = query_reps @ blk.T                                   # (Q, block)
+        ids = b0 + jnp.arange(block, dtype=jnp.int32)[None, :]
+        s = jnp.where(ids < n, s, -jnp.inf)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)], axis=1)
+        top_s, pos = jax.lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return (top_s, top_i), None
+
+    q = query_reps.shape[0]
+    init = (
+        jnp.full((q, k), -jnp.inf, query_reps.dtype),
+        jnp.zeros((q, k), jnp.int32),
+    )
+    offsets = jnp.arange(n_blocks, dtype=jnp.int32) * block
+    (scores, ids), _ = jax.lax.scan(body, init, (blocks, offsets))
+    return scores, ids
+
+
+def build_index(
+    encode_passage: Callable[[Any], jnp.ndarray],
+    passages: np.ndarray,
+    *,
+    batch: int = 256,
+) -> np.ndarray:
+    """Encode a corpus in fixed batches (pads the tail so one compiled shape
+    serves the whole build)."""
+    n = len(passages)
+    out: List[np.ndarray] = []
+    for lo in range(0, n, batch):
+        chunk = passages[lo : lo + batch]
+        if len(chunk) < batch:
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], batch - len(chunk), axis=0)]
+            )
+        out.append(np.asarray(encode_passage(chunk)))
+    return np.concatenate(out)[:n]
+
+
+# ----------------------------------------------------------- dynamic batching
+@dataclasses.dataclass
+class Request:
+    payload: np.ndarray
+    future: "queue.Queue"        # 1-slot: receives (ids, scores) or Exception
+    t_enqueue: float = dataclasses.field(default_factory=time.monotonic)
+
+
+class BatchingServer:
+    """Dynamic batcher: coalesce requests to ``max_batch`` (padding to the
+    compiled batch size) or flush after ``max_wait_s``."""
+
+    def __init__(
+        self,
+        serve_fn: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
+        *,
+        max_batch: int = 32,
+        max_wait_s: float = 0.01,
+    ):
+        self.serve_fn = serve_fn
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.batch_sizes: List[int] = []   # observability: coalescing histogram
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def submit(self, payload: np.ndarray) -> "queue.Queue":
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self._q.put(Request(payload=payload, future=fut))
+        return fut
+
+    def query(self, payload: np.ndarray, timeout: float = 30.0):
+        res = self.submit(payload).get(timeout=timeout)
+        if isinstance(res, Exception):
+            raise res
+        return res
+
+    # -- internals ---------------------------------------------------------
+    def _collect(self) -> List[Request]:
+        try:
+            first = self._q.get(timeout=0.05)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = first.t_enqueue + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _loop(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            self.batch_sizes.append(len(batch))
+            payloads = np.stack([r.payload for r in batch])
+            n = len(batch)
+            if n < self.max_batch:  # pad to the compiled shape
+                payloads = np.concatenate(
+                    [payloads, np.repeat(payloads[-1:], self.max_batch - n, axis=0)]
+                )
+            try:
+                ids, scores = self.serve_fn(payloads)
+                ids, scores = np.asarray(ids), np.asarray(scores)
+                for i, r in enumerate(batch):
+                    r.future.put((ids[i], scores[i]))
+            except Exception as e:  # pragma: no cover - surfaced to callers
+                for r in batch:
+                    r.future.put(e)
+
+
+def make_retrieval_server(
+    encode_query: Callable[[np.ndarray], jnp.ndarray],
+    index: np.ndarray,
+    *,
+    k: int = 20,
+    max_batch: int = 32,
+    max_wait_s: float = 0.01,
+) -> BatchingServer:
+    index_dev = jnp.asarray(index)
+
+    @jax.jit
+    def _serve(tokens):
+        reps = encode_query(tokens)
+        scores, ids = blocked_topk_scores(reps, index_dev, k)
+        return ids, scores
+
+    return BatchingServer(_serve, max_batch=max_batch, max_wait_s=max_wait_s)

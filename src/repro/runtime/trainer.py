@@ -1,0 +1,202 @@
+"""Fault-tolerant training loop.
+
+Production concerns handled here (the update step itself stays pure and
+jit-compiled — see core/methods.py and launch/steps.py):
+
+  * **Checkpoint/restart** — periodic async checkpoints of (train state,
+    loader state); on start the trainer resumes from the newest valid
+    checkpoint, skipping corrupt/partial ones (checkpoint/checkpoint.py).
+  * **Step-level fault tolerance** — a failing step (device error, NaN loss
+    if ``abort_on_nan``) triggers restore-from-last-checkpoint and replay,
+    up to ``max_restarts`` times. Fault-injection hooks make this testable.
+  * **Straggler watchdog** — per-step wall time is tracked with an EMA; steps
+    slower than ``straggler_factor`` x EMA are logged with their step index
+    (on a real pod the log feeds the reshard-and-restart runbook; here it is
+    also the hook tests use).
+  * **Preemption handling** — ``request_stop()`` (wire to SIGTERM in the
+    launcher) finishes the current step, writes a final checkpoint, exits
+    cleanly.
+
+The trainer is deliberately agnostic of what the step computes: it takes
+``step_fn(state, batch) -> (state, metrics)`` plus a ``next_batch()``
+callable, so the same loop drives the paper's ContAccum dual-encoder runs,
+the causal-LM cells, GNN and recsys training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager, latest_step
+from repro.data.loader import LoaderState
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 5          # steps before the EMA is trusted
+    ema_decay: float = 0.9
+    abort_on_nan: bool = True
+    log_every: int = 10
+
+
+class StepFailure(RuntimeError):
+    """Raised inside the loop to trigger restore-and-replay."""
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    restarts: int
+    stragglers: List[int]
+    final_metrics: Dict[str, float]
+    history: List[Dict[str, float]]
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        step_fn: Callable[[Any, Any], Any],
+        next_batch: Callable[[int], Any],
+        *,
+        loader_state: Optional[LoaderState] = None,
+        # test hooks ------------------------------------------------------
+        fault_hook: Optional[Callable[[int], None]] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.next_batch = next_batch
+        self.loader_state = loader_state or LoaderState()
+        self.fault_hook = fault_hook
+        self.clock = clock
+        self._stop = False
+        self.stragglers: List[int] = []
+        self.restarts = 0
+        self.history: List[Dict[str, float]] = []
+        self._ckpt = (
+            CheckpointManager(
+                cfg.checkpoint_dir, keep=cfg.keep_checkpoints, async_save=True
+            )
+            if cfg.checkpoint_dir
+            else None
+        )
+
+    # -- public control -----------------------------------------------------
+    def request_stop(self):
+        """Preemption notice: finish the current step, checkpoint, exit."""
+        self._stop = True
+
+    # -- checkpoint plumbing --------------------------------------------------
+    def _save(self, step: int, state, *, block: bool = False):
+        if self._ckpt is None:
+            return
+        payload = {
+            "state": state,
+            "loader": np.asarray(
+                [self.loader_state.epoch, self.loader_state.step], np.int64
+            ),
+        }
+        self._ckpt.save(step, payload, block=block)
+
+    def _restore(self, template_state):
+        if self._ckpt is None or latest_step(self.cfg.checkpoint_dir) is None:
+            return None
+        payload = {
+            "state": template_state,
+            "loader": np.zeros((2,), np.int64),
+        }
+        restored, step = self._ckpt.restore_latest(payload)
+        self.loader_state.epoch = int(restored["loader"][0])
+        self.loader_state.step = int(restored["loader"][1])
+        return restored["state"], step
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, state) -> tuple[Any, TrainerReport]:
+        cfg = self.cfg
+        start = 0
+        resumed = self._restore(state)
+        if resumed is not None:
+            state, start = resumed
+            start += 1
+
+        ema = None
+        step = start
+        last_metrics: Dict[str, float] = {}
+        while step < cfg.total_steps and not self._stop:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)  # may raise (injected fault)
+                batch = self.next_batch(step)
+                t0 = self.clock()
+                state, metrics = self.step_fn(state, batch)
+                metrics = jax.device_get(metrics)
+                dt = self.clock() - t0
+
+                if cfg.abort_on_nan:
+                    loss = float(np.asarray(getattr(metrics, "loss", metrics.get("loss", 0.0)) if isinstance(metrics, dict) else metrics.loss))
+                    if not np.isfinite(loss):
+                        raise StepFailure(f"non-finite loss at step {step}: {loss}")
+
+                # straggler watchdog
+                if ema is not None and step - start >= cfg.straggler_warmup:
+                    if dt > cfg.straggler_factor * ema:
+                        self.stragglers.append(step)
+                ema = dt if ema is None else cfg.ema_decay * ema + (1 - cfg.ema_decay) * dt
+
+                last_metrics = self._log(step, metrics, dt)
+                if cfg.checkpoint_dir and (step + 1) % cfg.checkpoint_every == 0:
+                    self._save(step, state)
+                step += 1
+            except (StepFailure, jax.errors.JaxRuntimeError, FloatingPointError) as e:
+                self.restarts += 1
+                if self.restarts > cfg.max_restarts or self._ckpt is None:
+                    raise
+                resumed = self._restore(state)
+                if resumed is None:
+                    raise RuntimeError(
+                        f"step {step} failed ({e}) with no checkpoint to restore"
+                    ) from e
+                state, ck_step = resumed
+                step = ck_step + 1
+
+        if self._ckpt is not None:
+            self._save(max(step - 1, 0), state, block=True)
+            self._ckpt.wait()
+        return state, TrainerReport(
+            steps_run=step - start,
+            restarts=self.restarts,
+            stragglers=self.stragglers,
+            final_metrics=last_metrics,
+            history=self.history,
+        )
+
+    def _log(self, step: int, metrics, dt: float) -> Dict[str, float]:
+        if isinstance(metrics, dict):
+            flat = {k: float(np.asarray(v)) for k, v in metrics.items()
+                    if np.ndim(v) == 0}
+        else:  # NamedTuple (StepMetrics)
+            flat = {
+                k: float(np.asarray(v))
+                for k, v in metrics._asdict().items()
+                if np.ndim(v) == 0
+            }
+        flat["step"] = step
+        flat["step_time_s"] = dt
+        self.history.append(flat)
+        if step % self.cfg.log_every == 0:
+            keys = [k for k in ("loss", "accuracy", "grad_norm_ratio") if k in flat]
+            msg = " ".join(f"{k}={flat[k]:.4f}" for k in keys)
+            print(f"step {step}: {msg} ({dt*1e3:.1f} ms)", flush=True)
+        return flat

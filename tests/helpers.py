@@ -1,0 +1,50 @@
+"""Shared test fixtures: a tiny nonlinear dual encoder over vector 'tokens'.
+
+Two-layer MLPs (separate query/passage towers) are enough to make the
+GradCache identity and the gradient-norm analyses non-trivial while keeping
+tests fast on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import DualEncoder, RetrievalBatch
+
+
+def make_mlp_encoder(dim_in: int = 16, dim_hidden: int = 32, dim_rep: int = 8) -> DualEncoder:
+    def tower_init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (dim_in, dim_hidden)) * 0.3,
+            "b1": jnp.zeros((dim_hidden,)),
+            "w2": jax.random.normal(k2, (dim_hidden, dim_rep)) * 0.3,
+            "b2": jnp.zeros((dim_rep,)),
+        }
+
+    def tower_apply(tp, x):
+        h = jnp.tanh(x @ tp["w1"] + tp["b1"])
+        return h @ tp["w2"] + tp["b2"]
+
+    def init(rng):
+        kq, kp = jax.random.split(rng)
+        return {"query": tower_init(kq), "passage": tower_init(kp)}
+
+    return DualEncoder(
+        init=init,
+        encode_query=lambda params, x: tower_apply(params["query"], x),
+        encode_passage=lambda params, x: tower_apply(params["passage"], x),
+        rep_dim=dim_rep,
+    )
+
+
+def make_batch(rng, batch_size: int, dim_in: int = 16, n_hard: int = 0) -> RetrievalBatch:
+    kq, kp, kh = jax.random.split(rng, 3)
+    # planted structure: positives correlated with queries so accuracy moves
+    q = jax.random.normal(kq, (batch_size, dim_in))
+    p = q + 0.5 * jax.random.normal(kp, (batch_size, dim_in))
+    hard = None
+    if n_hard > 0:
+        hard = q[:, None, :] + 1.5 * jax.random.normal(kh, (batch_size, n_hard, dim_in))
+    return RetrievalBatch(query=q, passage_pos=p, passage_hard=hard)

@@ -1,0 +1,123 @@
+"""Cross-device (shard_map) contrastive semantics == single-device semantics.
+
+Runs in a subprocess with 8 host platform devices so the main test process
+keeps the default 1-device view (per the dry-run isolation rule).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    shard_map = jax.shard_map
+    sys.path.insert(0, "tests")
+    from helpers import make_mlp_encoder, make_batch
+    from repro.core import (
+        ContrastiveConfig, RetrievalBatch, init_state, make_update_fn,
+    )
+    from repro.optim import chain, clip_by_global_norm, sgd
+
+    assert jax.device_count() == 8, jax.device_count()
+    D = 8
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
+
+    enc = make_mlp_encoder()
+    B = 32
+
+    def to_global_chunk_order(batch, k):
+        '''Distributed accumulation chunks are per-device-local microbatches:
+        global chunk j == union over devices of their j-th local chunk. The
+        equivalent single-device batch is the (D, K, lk) -> (K, D, lk)
+        transpose.'''
+        if k == 1:
+            return batch
+
+        def perm(x):
+            lk = x.shape[0] // (D * k)
+            y = x.reshape((D, k, lk) + x.shape[1:])
+            y = jnp.swapaxes(y, 0, 1)
+            return y.reshape((x.shape[0],) + x.shape[1:])
+
+        return RetrievalBatch(
+            query=perm(batch.query),
+            passage_pos=perm(batch.passage_pos),
+            passage_hard=None,
+        )
+
+    def run(method, dp_axis, k=1, bank=0, steps=3):
+        cfg = ContrastiveConfig(
+            method=method, accumulation_steps=k, bank_size=bank, dp_axis=dp_axis
+        )
+        tx = chain(clip_by_global_norm(2.0), sgd(0.05))
+        state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+        update = make_update_fn(enc, tx, cfg)
+        if dp_axis is not None:
+            batch_spec = RetrievalBatch(
+                query=P(("pod", "data")),
+                passage_pos=P(("pod", "data")),
+                passage_hard=None,
+            )
+            update = shard_map(
+                update,
+                mesh=mesh,
+                in_specs=(P(), batch_spec),
+                out_specs=(P(), P()),
+                check_vma=False,
+            )
+        update = jax.jit(update)
+        losses = []
+        for i in range(steps):
+            batch = make_batch(jax.random.PRNGKey(100 + i), B)
+            if dp_axis is None:
+                batch = to_global_chunk_order(batch, k)
+            state, m = update(state, batch)
+            losses.append(float(m.loss))
+        return state, losses
+
+    for method, kw in [
+        ("dpr", {}),
+        ("grad_accum", dict(k=2)),
+        ("grad_cache", dict(k=2)),
+        ("contaccum", dict(k=2, bank=16)),
+    ]:
+        s1, l1 = run(method, None, **kw)
+        s8, l8 = run(method, ("pod", "data"), **kw)
+        np.testing.assert_allclose(l1, l8, rtol=2e-4, err_msg=method)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(s1.params), jax.tree_util.tree_leaves(s8.params)
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-6, err_msg=method
+            )
+        print(f"OK {method}: dist == single-device, losses {l1}")
+    print("ALL-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_cross_device_negatives_match_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:tests"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-OK" in proc.stdout

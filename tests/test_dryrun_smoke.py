@@ -1,0 +1,65 @@
+"""Dry-run machinery smoke: build_cell -> lower -> compile -> analyze on a
+small forced-device mesh, one representative cell per family. Runs in a
+subprocess so the main pytest process keeps its 1-device view."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    assert jax.device_count() == 8
+    # shrink the production mesh to (4 data, 2 model) for the smoke
+    import repro.launch.mesh as mesh_mod
+    small = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+
+    from repro.launch.steps import build_cell, list_cells
+    from repro.launch import hlo_analysis as H
+
+    # one representative (cheap) cell per family
+    cells = [
+        ("schnet", "molecule"),
+        ("deepfm", "serve_p99"),
+        ("dpr-bert-base", "paper_batch"),
+    ]
+    for arch, shape in cells:
+        prog = build_cell(arch, shape, small)
+        jitted = jax.jit(prog.fn, donate_argnums=prog.donate_argnums)
+        compiled = jitted.lower(*prog.args).compile()
+        raw_flops, _ = H.cost_numbers(compiled)
+        stats = H.analyze_hlo(compiled.as_text(), 8)
+        roof = H.roofline(stats, raw_flops=raw_flops)
+        assert roof.t_compute >= 0 and roof.t_memory > 0, (arch, shape)
+        mem = H.memory_numbers(compiled)
+        assert mem.get("total_bytes", 1) > 0
+        print(f"{arch}/{shape}: OK dominant={roof.dominant}")
+
+    # the full cell list covers all 10 assigned archs x their shapes
+    all_cells = list_cells()
+    archs = {a for a, _ in all_cells}
+    assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
+    assert len(all_cells) == 42, len(all_cells)
+    print("CELL_LIST_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_subprocess():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "CELL_LIST_OK" in res.stdout

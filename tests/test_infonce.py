@@ -1,0 +1,149 @@
+"""InfoNCE primitive + agreement between the reference extended loss
+(core.infonce.extended_loss) and the production loss (core.loss).
+
+Property-style invariants use seeded randomized sweeps (`hypothesis` is not
+installed in this offline container — see DESIGN.md §5).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.infonce import extended_loss, in_batch_loss, info_nce
+from repro.core.loss import contrastive_step_loss
+from repro.core.memory_bank import BankState, init_bank, push
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def test_info_nce_matches_manual_softmax_xent():
+    q = _rand(0, 6, 8)
+    p = _rand(1, 6, 8)
+    out = info_nce(q, p)
+    logits = np.asarray(q @ p.T, dtype=np.float64)
+    expected = np.mean(
+        [-logits[i, i] + np.log(np.exp(logits[i]).sum()) for i in range(6)]
+    )
+    np.testing.assert_allclose(float(out.loss), expected, rtol=1e-5)
+
+
+def test_temperature_scaling():
+    q = _rand(2, 4, 8)
+    p = _rand(3, 4, 8)
+    hot = info_nce(q, p, temperature=0.1)
+    cold = info_nce(q, p, temperature=10.0)
+    # cold temperature -> logits shrink -> loss approaches log N
+    np.testing.assert_allclose(float(cold.loss), np.log(4.0), atol=0.2)
+    assert not np.isclose(float(hot.loss), float(cold.loss))
+
+
+def test_col_mask_excludes_columns_exactly():
+    q = _rand(4, 4, 8)
+    p = _rand(5, 6, 8)
+    mask = jnp.array([True, True, True, True, False, False])
+    masked = info_nce(q, p, col_mask=mask)
+    dense = info_nce(q, p[:4])
+    np.testing.assert_allclose(float(masked.loss), float(dense.loss), rtol=1e-6)
+
+
+def test_row_mask_excludes_rows_exactly():
+    q = _rand(6, 6, 8)
+    p = _rand(7, 6, 8)
+    labels = jnp.arange(6, dtype=jnp.int32)
+    mask = jnp.array([True, True, True, False, False, False])
+    masked = info_nce(q, p, labels=labels, row_mask=mask)
+    dense = info_nce(q[:3], p, labels=labels[:3])
+    np.testing.assert_allclose(float(masked.loss), float(dense.loss), rtol=1e-6)
+
+
+def test_hard_negatives_increase_loss():
+    q = _rand(8, 8, 16)
+    p = q + 0.01 * _rand(9, 8, 16)  # near-perfect positives
+    hard = q + 0.05 * _rand(10, 8, 16)  # very hard negatives
+    plain = in_batch_loss(q, p)
+    with_hard = in_batch_loss(q, p, hard)
+    assert float(with_hard.loss) > float(plain.loss)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("cq,cp", [(8, 8), (0, 8), (8, 0), (4, 8), (0, 0)])
+def test_production_loss_matches_reference(seed, cq, cp):
+    """core.loss.contrastive_step_loss ≡ core.infonce.extended_loss across
+    bank configurations and fill levels (randomized sweep)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    b, d, h = 4, 8, 2
+    q = jax.random.normal(ks[0], (b, d))
+    pp = jax.random.normal(ks[1], (b, d))
+    ph = jax.random.normal(ks[2], (b * h, d))
+
+    bank_q = init_bank(cq, d)
+    bank_p = init_bank(cp, d)
+    n_fill = int(jax.random.randint(ks[3], (), 0, max(min(cq, cp), 1) + 1))
+    if n_fill:
+        bank_q = push(bank_q, jax.random.normal(ks[4], (n_fill, d)))
+        bank_p = push(bank_p, jax.random.normal(ks[5], (n_fill, d)))
+
+    loss_prod, aux = contrastive_step_loss(q, pp, ph, bank_q, bank_p, temperature=0.5)
+    ref = extended_loss(
+        q,
+        pp,
+        ph,
+        bank_q.buf if cq else None,
+        bank_q.valid if cq else None,
+        bank_p.buf if cp else None,
+        bank_p.valid if cp else None,
+        temperature=0.5,
+    )
+    np.testing.assert_allclose(float(loss_prod), float(ref.loss), rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_loss_invariant_to_bank_ring_position(seed):
+    """The extended loss must not depend on where the ring head is — only on
+    the (aligned) contents."""
+    d, b = 8, 4
+    key = jax.random.PRNGKey(100 + seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, d))
+    pp = jax.random.normal(ks[1], (b, d))
+    qb = jax.random.normal(ks[2], (6, d))
+    pb = jax.random.normal(ks[3], (6, d))
+
+    losses = []
+    for lead in range(3):
+        bank_q = init_bank(6, d)
+        bank_p = init_bank(6, d)
+        # rotate push order; alignment q_i <-> p_i preserved
+        perm = (np.arange(6) + lead) % 6
+        bank_q = push(bank_q, qb[perm])
+        bank_p = push(bank_p, pb[perm])
+        loss, _ = contrastive_step_loss(q, pp, None, bank_q, bank_p)
+        losses.append(float(loss))
+    np.testing.assert_allclose(losses[0], losses[1], rtol=1e-6)
+    np.testing.assert_allclose(losses[0], losses[2], rtol=1e-6)
+
+
+def test_grads_flow_to_current_passages_from_bank_query_rows():
+    """Paper Eq. 9: bank query rows contribute gradient to *current* passages
+    through the softmax columns — the mechanism behind dual-bank stability."""
+    d, b = 8, 4
+    q = _rand(20, b, d)
+    pp = _rand(21, b, d)
+    bank_q = push(init_bank(4, d), _rand(22, 4, d))
+    bank_p = push(init_bank(4, d), _rand(23, 4, d))
+
+    def loss_only_bank_rows(pp_):
+        # mask local rows by feeding orthogonal queries far away? Instead:
+        # compute full loss and the local-row-only loss; their difference is
+        # the bank-row contribution. Grad of that difference wrt pp must be
+        # nonzero.
+        full, _ = contrastive_step_loss(q, pp_, None, bank_q, bank_p)
+        local_only, _ = contrastive_step_loss(q, pp_, None, None, None)
+        return full - local_only
+
+    g = jax.grad(loss_only_bank_rows)(pp)
+    assert float(jnp.abs(g).sum()) > 0.0

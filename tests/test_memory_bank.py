@@ -1,0 +1,85 @@
+"""FIFO ring-buffer semantics of the dual memory bank (paper Fig. 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memory_bank import clear, init_bank, n_valid, ordered, push, push_pair
+
+
+def rows(vals, d=4):
+    return jnp.stack([jnp.full((d,), v, jnp.float32) for v in vals])
+
+
+def test_push_fills_then_wraps():
+    bank = init_bank(4, 4)
+    bank = push(bank, rows([1, 2]))
+    assert int(n_valid(bank)) == 2
+    bank = push(bank, rows([3, 4]))
+    assert int(n_valid(bank)) == 4
+    # wrap: 5 overwrites the oldest (1)
+    bank = push(bank, rows([5]))
+    buf, valid = ordered(bank)
+    np.testing.assert_array_equal(np.asarray(buf[:, 0]), [2, 3, 4, 5])
+    assert bool(valid.all())
+
+
+def test_push_larger_than_capacity_keeps_newest():
+    bank = init_bank(3, 4)
+    bank = push(bank, rows([1, 2, 3, 4, 5]))
+    vals = sorted(np.asarray(bank.buf[:, 0]).tolist())
+    assert vals == [3, 4, 5]
+    assert int(n_valid(bank)) == 3
+
+
+def test_clear_invalidates():
+    bank = init_bank(4, 4)
+    bank = push(bank, rows([1, 2, 3]))
+    bank = clear(bank)
+    assert int(n_valid(bank)) == 0
+    assert int(bank.head) == 0
+
+
+def test_push_is_stop_gradient():
+    """Bank entries must not carry gradients (paper's sg(.))."""
+
+    def f(x):
+        bank = init_bank(2, 4)
+        bank = push(bank, x)
+        return jnp.sum(bank.buf)
+
+    g = jax.grad(f)(rows([1, 2]))
+    np.testing.assert_array_equal(np.asarray(g), np.zeros((2, 4)))
+
+
+def test_push_pair_alignment():
+    bq = init_bank(4, 4)
+    bp = init_bank(4, 4)
+    for i in range(6):  # push in lockstep, wrap twice
+        bq, bp = push_pair(bq, bp, rows([10 + i]), rows([20 + i]))
+    # aligned slots: query 10+i sits at the same ring index as passage 20+i
+    np.testing.assert_array_equal(
+        np.asarray(bq.buf[:, 0]) + 10, np.asarray(bp.buf[:, 0])
+    )
+
+
+def test_zero_capacity_bank_noop():
+    bank = init_bank(0, 4)
+    bank2 = push(bank, rows([1, 2]))
+    assert bank2.buf.shape == (0, 4)
+    assert int(n_valid(bank2)) == 0
+
+
+def test_jit_and_scan_compatible():
+    bank = init_bank(8, 4)
+
+    def body(bank, x):
+        return push(bank, x[None, :]), None
+
+    xs = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
+    bank, _ = jax.lax.scan(jax.jit(body), bank, xs)
+    assert int(n_valid(bank)) == 8
+    # the newest 8 rows survive
+    got = np.sort(np.asarray(bank.buf), axis=0)
+    want = np.sort(np.asarray(xs[8:]), axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+These complement the seeded sweeps in the other test modules with
+adversarially-searched counterexamples over the loss, the memory bank, the
+data loader and the serving top-k."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.infonce import in_batch_loss, info_nce
+from repro.core.memory_bank import init_bank, n_valid, push
+from repro.data.loader import ShardedLoader
+from repro.optim.schedules import linear_warmup_linear_decay
+from repro.runtime.server import blocked_topk_scores
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def _reps(rng, n, d):
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+@_settings
+@given(
+    n=st.integers(2, 12),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+    tau=st.floats(0.05, 4.0),
+)
+def test_infonce_permutation_equivariance(n, d, seed, tau):
+    """Permuting (query, positive) pairs together leaves the loss unchanged."""
+    rng = np.random.default_rng(seed)
+    q, p = _reps(rng, n, d), _reps(rng, n, d)
+    perm = rng.permutation(n)
+    base = in_batch_loss(q, p, temperature=tau).loss
+    permuted = in_batch_loss(q[perm], p[perm], temperature=tau).loss
+    np.testing.assert_allclose(base, permuted, rtol=2e-5, atol=2e-6)
+
+
+@_settings
+@given(
+    n=st.integers(2, 10),
+    n_extra=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_infonce_extra_negatives_never_decrease_loss(n, n_extra, seed):
+    """More negative columns => logsumexp grows => loss is non-decreasing
+    (the monotonicity that motivates large batches / memory banks)."""
+    rng = np.random.default_rng(seed)
+    q, p = _reps(rng, n, 8), _reps(rng, n, 8)
+    extra = _reps(rng, n_extra, 8)
+    base = info_nce(q, p).loss
+    more = info_nce(q, jnp.concatenate([p, extra], axis=0)).loss
+    assert float(more) >= float(base) - 1e-6
+
+
+@_settings
+@given(
+    n=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_infonce_masked_rows_do_not_contribute(n, seed):
+    rng = np.random.default_rng(seed)
+    q, p = _reps(rng, n, 6), _reps(rng, n, 6)
+    full = info_nce(q, p).loss
+    # append garbage rows, masked out: loss must not change
+    garbage = _reps(rng, 3, 6) * 100
+    q2 = jnp.concatenate([q, garbage], axis=0)
+    labels = jnp.concatenate([jnp.arange(n), jnp.zeros(3, jnp.int32)])
+    mask = jnp.concatenate([jnp.ones(n, bool), jnp.zeros(3, bool)])
+    masked = info_nce(q2, p, labels=labels, row_mask=mask).loss
+    np.testing.assert_allclose(full, masked, rtol=1e-5, atol=1e-6)
+
+
+@_settings
+@given(
+    cap=st.integers(1, 16),
+    pushes=st.lists(st.integers(1, 5), min_size=1, max_size=10),
+    seed=st.integers(0, 2**16),
+)
+def test_bank_fifo_keeps_exactly_the_newest(cap, pushes, seed):
+    rng = np.random.default_rng(seed)
+    bank = init_bank(cap, 2)
+    stream = []
+    t = 0
+    for n in pushes:
+        block = np.arange(t, t + n, dtype=np.float32)
+        t += n
+        stream += block.tolist()
+        bank = push(bank, jnp.stack([jnp.asarray(block)] * 2, axis=1))
+    expect = sorted(stream[-cap:]) if len(stream) >= cap else sorted(stream)
+    got = sorted(np.asarray(bank.buf)[np.asarray(bank.valid)][:, 0].tolist())
+    assert got == expect
+    assert int(n_valid(bank)) == min(len(stream), cap)
+
+
+@_settings
+@given(
+    n=st.integers(64, 512),
+    gb_exp=st.integers(2, 5),
+    n_hosts=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_loader_host_partition_is_exact(n, gb_exp, n_hosts, seed):
+    gb = 2 ** gb_exp * n_hosts
+    if n < gb:
+        n = gb
+    loaders = [
+        ShardedLoader(n, gb, seed=seed, host_id=h, n_hosts=n_hosts)
+        for h in range(n_hosts)
+    ]
+    ref = ShardedLoader(n, gb, seed=seed)
+    for _ in range(3):
+        want = np.sort(ref.next_indices())
+        parts = np.concatenate([l.next_indices() for l in loaders])
+        assert len(parts) == gb
+        assert np.array_equal(np.sort(parts), want)
+
+
+@_settings
+@given(
+    peak=st.floats(1e-6, 1.0),
+    warm=st.integers(1, 100),
+    total=st.integers(102, 1000),
+)
+def test_schedule_bounds_and_endpoints(peak, warm, total):
+    s = linear_warmup_linear_decay(peak, warm, total)
+    for step in [0, 1, warm, (warm + total) // 2, total, total + 10]:
+        v = float(s(step))
+        assert -1e-9 <= v <= peak * (1 + 1e-6)
+    assert float(s(warm)) >= 0.9 * peak * (warm / max(warm, 1))
+    assert float(s(total + 5)) == 0.0
+
+
+@_settings
+@given(
+    n=st.integers(10, 400),
+    q=st.integers(1, 6),
+    k=st.integers(1, 10),
+    block=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_blocked_topk_is_exact(n, q, k, block, seed):
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(q, 8)).astype(np.float32)
+    idx = rng.normal(size=(n, 8)).astype(np.float32)
+    scores, ids = blocked_topk_scores(jnp.asarray(qs), jnp.asarray(idx), k, block=block)
+    ref_scores = np.sort(qs @ idx.T, axis=1)[:, ::-1][:, :k]
+    np.testing.assert_allclose(np.asarray(scores), ref_scores, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,213 @@
+"""Data pipeline, checkpointing, optimizer, and compression tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.data.graph import block_sizes, sample_blocks, synthetic_graph, to_edge_list
+from repro.data.loader import LoaderState, PrefetchIterator, ShardedLoader
+from repro.data.recsys import ClickLogGenerator
+from repro.data.retrieval import SyntheticRetrievalCorpus, hash_tokenize
+from repro.optim import adamw, linear_warmup_linear_decay
+from repro.optim.compression import compress_with_feedback, init_error_feedback
+
+
+# --------------------------------------------------------------------- loader
+def test_loader_determinism_and_epoch_rollover():
+    l1 = ShardedLoader(100, 20, seed=7)
+    seq1 = [l1.next_indices() for _ in range(12)]  # crosses epoch boundary (5/epoch)
+    l2 = ShardedLoader(100, 20, seed=7)
+    seq2 = [l2.next_indices() for _ in range(12)]
+    for a, b in zip(seq1, seq2):
+        np.testing.assert_array_equal(a, b)
+    assert l1.state.epoch == 2 and l1.state.step == 2
+
+
+def test_loader_host_sharding_partitions_global_batch():
+    hosts = [ShardedLoader(64, 16, seed=3, host_id=h, n_hosts=4) for h in range(4)]
+    parts = [h.next_indices() for h in hosts]
+    union = np.sort(np.concatenate(parts))
+    ref = np.sort(ShardedLoader(64, 16, seed=3).next_indices())
+    np.testing.assert_array_equal(union, ref)
+    assert all(len(p) == 4 for p in parts)
+
+
+def test_loader_elastic_resume_replays_same_globals():
+    """Resume with a different host count must replay the same global stream."""
+    l4 = ShardedLoader(128, 32, seed=1, n_hosts=1)
+    for _ in range(2):
+        l4.next_indices()
+    saved = l4.state.to_dict()
+    # resume as 2 hosts from the saved state
+    h0 = ShardedLoader(128, 32, seed=1, host_id=0, n_hosts=2, state=LoaderState.from_dict(saved))
+    h1 = ShardedLoader(128, 32, seed=1, host_id=1, n_hosts=2, state=LoaderState.from_dict(saved))
+    union = np.sort(np.concatenate([h0.next_indices(), h1.next_indices()]))
+    ref = np.sort(ShardedLoader(128, 32, seed=1).global_indices_for(saved["epoch"], saved["step"]))
+    np.testing.assert_array_equal(union, ref)
+
+
+def test_prefetch_iterator():
+    counter = {"n": 0}
+
+    def make():
+        counter["n"] += 1
+        return {"x": np.full((2,), counter["n"])}
+
+    it = PrefetchIterator(make, depth=2)
+    got = [next(it)["x"][0] for _ in range(5)]
+    it.close()
+    assert got == sorted(got)  # in order
+    assert got[0] == 1
+
+
+# ----------------------------------------------------------------- retrieval
+def test_synthetic_corpus_learnable_structure():
+    c = SyntheticRetrievalCorpus(n_passages=64, seed=0)
+    b = c.batch(np.arange(8))
+    assert b["query"].shape == (8, 16)
+    assert b["passage_pos"].shape == (8, 32)
+    assert b["passage_hard"].shape == (8, 1, 32)
+    # hard negative shares the topic prefix with the positive
+    np.testing.assert_array_equal(
+        b["passage_pos"][:, 1:5] == b["passage_hard"][:, 0, 1:5],
+        np.ones((8, 4), bool),
+    )
+
+
+def test_hash_tokenizer_deterministic():
+    a = hash_tokenize("the quick brown fox", 1000, 8)
+    b = hash_tokenize("the quick brown fox", 1000, 8)
+    np.testing.assert_array_equal(a, b)
+    assert a[0] == 1 and a.shape == (8,)
+
+
+# --------------------------------------------------------------------- graph
+def test_neighbor_sampler_shapes_and_validity():
+    g = synthetic_graph(500, 8, 16, 5, seed=0)
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, 500, 32)
+    nodes, src, dst, mask = sample_blocks(g, seeds, [5, 3], rng)
+    max_nodes, max_edges = block_sizes(32, [5, 3])
+    assert nodes.shape == (max_nodes,)
+    assert src.shape == dst.shape == (max_edges,)
+    assert mask.all()
+    # every edge points to a valid node position
+    assert src.max() < max_nodes and dst.max() < max_nodes
+    # messages flow from later layers toward the seeds
+    assert (dst < src).all()
+
+
+def test_edge_list_roundtrip():
+    g = synthetic_graph(100, 4, 8, 3, seed=1)
+    dst, src, dist = to_edge_list(g)
+    assert len(dst) == g.n_edges == len(src) == len(dist)
+
+
+# -------------------------------------------------------------------- recsys
+def test_clicklog_planted_signal():
+    gen = ClickLogGenerator(vocab_sizes=(100, 50, 20), n_dense=4, seed=0)
+    b = gen.batch(512, step=0)
+    assert b["dense"].shape == (512, 4)
+    assert b["sparse"].shape == (512, 3)
+    assert (b["sparse"] < np.array([100, 50, 20])).all()
+    assert 0.05 < b["labels"].mean() < 0.95
+    b2 = gen.batch(512, step=0)
+    np.testing.assert_array_equal(b["sparse"], b2["sparse"])  # deterministic
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+        "b": {"c": jnp.ones((4,), jnp.int32)},
+    }
+    save_checkpoint(str(tmp_path), 5, tree)
+    template = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), template)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]), np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_skips_corrupt_and_falls_back(tmp_path):
+    tree = {"w": jnp.ones((3,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, jax.tree_util.tree_map(lambda x: x * 2, tree))
+    # corrupt the newest checkpoint's data file
+    import glob
+
+    victim = glob.glob(str(tmp_path / "step_000000000002" / "leaf_*.npy"))[0]
+    with open(victim, "wb") as f:
+        f.write(b"corrupt")
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones(3))
+
+
+def test_checkpoint_partial_write_invisible(tmp_path):
+    """A checkpoint dir without manifest.json (preempted mid-save) is ignored."""
+    tree = {"w": jnp.ones((3,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / "step_000000000009")  # no manifest
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    tree = {"w": jnp.zeros((2,))}
+    for s in range(5):
+        mgr.save(s, jax.tree_util.tree_map(lambda x: x + s, tree))
+    mgr.wait()
+    from repro.checkpoint.checkpoint import _valid_steps
+
+    assert _valid_steps(str(tmp_path)) == [3, 4]
+    restored, step = mgr.restore_latest(tree)
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full(2, 4.0))
+
+
+# --------------------------------------------------------------- compression
+def test_error_feedback_unbiased_over_time():
+    """bf16 compression loses bits per step, but the error-feedback residual
+    keeps the *running sum* of compressed gradients within one quantum of the
+    true running sum — the property that makes compressed SGD converge."""
+    rng = jax.random.PRNGKey(0)
+    g_true = jax.random.normal(rng, (1000,)) * 1e-3
+    state = init_error_feedback({"w": g_true})
+    total_q = jnp.zeros((1000,), jnp.float32)
+    for _ in range(50):
+        q, state = compress_with_feedback({"w": g_true}, state)
+        total_q = total_q + q["w"].astype(jnp.float32)
+    total_true = g_true * 50
+    # without feedback, bf16 bias would accumulate linearly; with feedback the
+    # residual bounds the gap by one quantization step
+    gap = float(jnp.abs(total_q - total_true).max())
+    one_step_q = float(jnp.abs(g_true - g_true.astype(jnp.bfloat16).astype(jnp.float32)).max())
+    assert gap <= 2 * one_step_q + 1e-9, (gap, one_step_q)
+
+
+def test_schedule_shapes():
+    sched = linear_warmup_linear_decay(2e-5, warmup_steps=100, total_steps=1000)
+    assert float(sched(0)) == 0.0
+    np.testing.assert_allclose(float(sched(100)), 2e-5, rtol=1e-6)
+    assert float(sched(550)) == pytest.approx(1e-5, rel=0.01)
+    assert float(sched(1000)) == 0.0
+
+
+def test_adamw_weight_decay_mask():
+    params = {"w": jnp.ones((2,)), "ln": jnp.ones((2,))}
+    tx = adamw(1e-2, weight_decay=0.1, mask=lambda p: {"w": True, "ln": False})
+    state = tx.init(params)
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    updates, _ = tx.update(grads, state, params)
+    assert float(jnp.abs(updates["w"]).sum()) > 0  # decay applied
+    assert float(jnp.abs(updates["ln"]).sum()) == 0  # masked out
