@@ -3,8 +3,8 @@
 The paper's tables are reproduced at reduced scale on CPU with the synthetic
 planted-relevance corpus (real NQ/TriviaQA/MS-Marco are not redistributable
 offline — DESIGN.md §7.4). Every benchmark exercises the same production
-code paths (core/methods.py update builders, optim, data loaders); only the
-encoder width and corpus size shrink.
+code paths (core/step_program.py update programs, optim, data loaders); only
+the encoder width and corpus size shrink.
 """
 
 from __future__ import annotations
@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.methods import init_state, make_update_fn
+from repro.core.methods import build_step_program, init_state
 from repro.core.types import ContrastiveConfig, DualEncoder, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
@@ -64,7 +64,7 @@ def train_retriever(
         clip_by_global_norm(cfg.grad_clip_norm),
         adamw(linear_warmup_linear_decay(lr, max(steps // 10, 1), steps)),
     )
-    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    update = jax.jit(build_step_program(enc, tx, cfg).update, donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(seed), enc, tx, cfg)
     loader = ShardedLoader(corpus.n_passages, total_batch, seed=seed)
 
@@ -104,7 +104,7 @@ def time_update(
     corpus = make_corpus(n=max(2 * total_batch, 512))
     enc = make_bert_dual_encoder(bench_bert())
     tx = chain(clip_by_global_norm(2.0), adamw(1e-4))
-    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    update = jax.jit(build_step_program(enc, tx, cfg).update, donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(seed), enc, tx, cfg)
     idx = np.arange(total_batch)
     b = corpus.batch(idx)

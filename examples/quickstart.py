@@ -54,9 +54,14 @@ def main():
         state, m = warm_update(state, next(stream))
     print(f"warm-up done: loss {float(m.loss):.3f}")
 
-    # ---- phase 2: ContAccum — the paper's method
+    # ---- phase 2: ContAccum — the paper's method, spelled as an explicit
+    # (negative source x backprop strategy) composition. method="contaccum"
+    # is the same thing; other cells of the matrix: negatives in
+    # {in_batch, gathered, dual_bank, passage_bank}, backprop in
+    # {direct, scan, rep_cache} — e.g. dual_bank x rep_cache = "contcache".
     cfg = ContrastiveConfig(
-        method="contaccum",        # or: dpr | grad_accum | grad_cache
+        negatives="dual_bank",     # where negatives come from
+        backprop="scan",           # how the backward pass is scheduled
         accumulation_steps=4,      # K       (N_local = 32/4 = 8)
         bank_size=128,             # N_memory for BOTH banks (dual symmetry)
         temperature=1.0,

@@ -17,7 +17,15 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core.methods import init_state, make_update_fn
+from repro.core.methods import (
+    available_methods,
+    build_step_program,
+    init_state,
+    make_update_fn,
+    method_composition,
+    method_needs_mesh,
+    method_uses_banks,
+)
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
@@ -46,7 +54,17 @@ PRESETS = {
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--method", default="contaccum",
+                    choices=[m for m in available_methods()
+                             if not method_needs_mesh(m)],
+                    help="any registered source x strategy composition this "
+                         "single-program driver can build "
+                         "(core/step_program.py; mesh-requiring methods "
+                         "are excluded)")
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--warmup-steps", type=int, default=None,
+                    help="in-batch warm-up steps for from-scratch presets "
+                         "(default: max(steps//2, 50))")
     ap.add_argument("--total-batch", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--bank", type=int, default=256)
@@ -58,8 +76,11 @@ def main(argv=None):
     bert = PRESETS[args.preset]
     lr = args.lr or (2e-5 if args.preset == "paper" else 1e-4)
     k = max(args.total_batch // args.local_batch, 1)
+    _, backprop = method_composition(args.method)
     cfg = ContrastiveConfig(
-        method="contaccum", accumulation_steps=k, bank_size=args.bank,
+        method=args.method,
+        accumulation_steps=k if backprop != "direct" else 1,
+        bank_size=args.bank if method_uses_banks(args.method) else 0,
         temperature=1.0, grad_clip_norm=2.0,
     )
     enc = make_bert_dual_encoder(bert)
@@ -70,13 +91,18 @@ def main(argv=None):
             args.steps,
         )),
     )
-    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    program = build_step_program(enc, tx, cfg)
+    update = jax.jit(program.update, donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
 
     # Memory banks need an encoder whose representations drift slowly (the
     # paper fine-tunes pretrained BERT; see benchmarks/bench_regimes.py).
     # For from-scratch presets, warm the towers up with in-batch negatives.
-    if args.preset != "paper":
+    # Bank-free methods don't need it: warm up only when asked explicitly.
+    wants_warmup = method_uses_banks(args.method) or (
+        args.warmup_steps is not None and args.warmup_steps > 0
+    )
+    if args.preset != "paper" and wants_warmup:
         warm_cfg = ContrastiveConfig(method="dpr")
         warm_tx = chain(clip_by_global_norm(2.0), adamw(1e-3))
         warm = jax.jit(make_update_fn(enc, warm_tx, warm_cfg),
@@ -88,7 +114,9 @@ def main(argv=None):
             q_len=16, p_len=32,
         )
         wloader = ShardedLoader(args.corpus, args.total_batch, seed=7)
-        for _ in range(max(args.steps // 2, 50)):
+        n_warm = (args.warmup_steps if args.warmup_steps is not None
+                  else max(args.steps // 2, 50))
+        for _ in range(n_warm):
             b = wcorpus.batch(wloader.next_indices())
             wstate, _ = warm(wstate, RetrievalBatch(
                 query=jnp.asarray(b["query"]),
@@ -100,8 +128,10 @@ def main(argv=None):
     n_params = sum(
         int(x.size) for x in jax.tree_util.tree_leaves(state.params)
     )
-    print(f"preset={args.preset}: {n_params/1e6:.1f}M params (both towers), "
-          f"K={k}, N_mem={args.bank}")
+    print(f"preset={args.preset} method={program.name} "
+          f"({program.source.name} x {program.strategy.name}): "
+          f"{n_params/1e6:.1f}M params (both towers), "
+          f"K={cfg.accumulation_steps}, N_mem={cfg.bank_size}")
 
     corpus = SyntheticRetrievalCorpus(
         n_passages=args.corpus, vocab_size=bert.vocab_size,

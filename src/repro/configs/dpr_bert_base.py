@@ -35,6 +35,35 @@ DPR_SHAPES = {
             "n_hard": 1,
         },
     ),
+    # new compositions the monolithic API could not express
+    # (core/step_program.py): cached-VJP backprop + dual banks ...
+    "contcache_batch": ShapeCell(
+        "contcache_batch",
+        "contrastive",
+        {
+            "method": "contcache",
+            "global_batch": 128,
+            "accum_steps": 16,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+        },
+    ),
+    # ... and cached-VJP + passage-only bank (pre-batch negatives)
+    "prebatch_cache_batch": ShapeCell(
+        "prebatch_cache_batch",
+        "contrastive",
+        {
+            "method": "prebatch_cache",
+            "global_batch": 128,
+            "accum_steps": 16,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+        },
+    ),
 }
 
 register(

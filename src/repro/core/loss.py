@@ -1,22 +1,31 @@
 """The canonical contrastive step loss shared by every update method.
 
 Single implementation covering:
-  - plain in-batch negatives (DPR / GradAccum / GradCache): empty banks;
+  - plain in-batch negatives (DPR / GradAccum / GradCache): no extras;
   - ContAccum's extended similarity matrix (paper Eq. 5-7): dual banks;
   - pre-batch negatives ablation: passage-only bank;
   - cross-device negatives: columns are all-gathered across the DP axes and
     each device reduces over its own rows (see core/dist.py).
 
+Column assembly is *source-driven*: a NegativeSource (core/step_program.py)
+describes where its negatives come from with two declarative blocks —
+``ExtraColumns`` (extra similarity columns + validity mask) and ``ExtraRows``
+(extra replicated query rows + their labels into the extra-column block) —
+and ``contrastive_loss`` assembles the matrix. The legacy bank-taking entry
+point ``contrastive_step_loss`` is a thin wrapper that converts dual banks
+into those blocks.
+
 Row/column layout (global view):
 
-  rows    = [ global queries (B_g) ] ++ [ bank queries (Cq) ]
+  rows    = [ global queries (B_g) ] ++ [ extra rows (R) ]
   columns = [ global positives (B_g) ] ++ [ global hard negs (B_g*H) ]
-            ++ [ bank passages (Cp) ]
+            ++ [ extra columns (C) ]
 
-Labels: global query i -> column i; bank query j -> column B_g*(1+H) + j.
-Invalid bank slots are masked exactly (warm-up phase). In distributed mode a
-device owns its local query rows plus a 1/D share of the (replicated) bank
-rows, so the psum over devices reproduces the global row sum exactly once.
+Labels: global query i -> column i; extra row j -> column
+B_g*(1+H) + extra_rows.labels[j]. Invalid extra slots are masked exactly
+(warm-up phase). In distributed mode a device owns its local query rows plus
+a 1/D share of the (replicated) extra rows, so the psum over devices
+reproduces the global row sum exactly once.
 """
 
 from __future__ import annotations
@@ -28,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.dist import DistCtx
 from repro.core.infonce import NEG_INF
-from repro.core.memory_bank import BankState
+from repro.core.memory_bank import BankState, aligned_valid, columns_view
 
 
 class LossAux(NamedTuple):
@@ -40,13 +49,35 @@ class LossAux(NamedTuple):
     p_global: jnp.ndarray      # gathered positive-passage reps (for bank push)
 
 
-def contrastive_step_loss(
+class ExtraColumns(NamedTuple):
+    """Extra similarity columns owned by a negative source (e.g. a passage
+    bank). ``valid`` masks slots exactly (False slots never enter the
+    softmax)."""
+
+    reps: jnp.ndarray   # (C, d)
+    valid: jnp.ndarray  # (C,) bool
+
+
+class ExtraRows(NamedTuple):
+    """Extra query rows owned by a negative source (e.g. a query bank).
+
+    Rows are replicated across devices; each device contributes a 1/D share
+    so the psum reproduces their sum exactly once. ``labels`` index into the
+    source's ExtraColumns block (the loss adds the in-batch column offset).
+    ``weight`` in [0, 1] scales each row's contribution (0 masks it out)."""
+
+    reps: jnp.ndarray    # (R, d)
+    labels: jnp.ndarray  # (R,) int32 — positive's index within ExtraColumns
+    weight: jnp.ndarray  # (R,) float32
+
+
+def contrastive_loss(
     q_local: jnp.ndarray,
     p_pos_local: jnp.ndarray,
-    p_hard_local: Optional[jnp.ndarray],
-    bank_q: Optional[BankState],
-    bank_p: Optional[BankState],
+    p_hard_local: Optional[jnp.ndarray] = None,
     *,
+    extra_cols: Optional[ExtraColumns] = None,
+    extra_rows: Optional[ExtraRows] = None,
     temperature: float = 1.0,
     ctx: Optional[DistCtx] = None,
 ) -> tuple[jnp.ndarray, LossAux]:
@@ -65,15 +96,14 @@ def contrastive_step_loss(
     b_g = p_pos.shape[0]
     n_hard = 0 if len(cols) == 1 else cols[1].shape[0]
 
-    cq = 0 if bank_q is None else bank_q.buf.shape[0]
-    cp = 0 if bank_p is None else bank_p.buf.shape[0]
-    if cp > 0:
-        cols.append(bank_p.buf.astype(p_pos.dtype))
+    n_extra = 0 if extra_cols is None else extra_cols.reps.shape[0]
+    if n_extra > 0:
+        cols.append(extra_cols.reps.astype(p_pos.dtype))
     p_all = jnp.concatenate(cols, axis=0)
 
     col_mask = jnp.ones((b_g + n_hard,), dtype=bool)
-    if cp > 0:
-        col_mask = jnp.concatenate([col_mask, bank_p.valid], axis=0)
+    if n_extra > 0:
+        col_mask = jnp.concatenate([col_mask, extra_cols.valid], axis=0)
 
     # --- local rows: this device's queries ---
     row_offset = ctx.shard_index() * b_local  # global index of local row 0
@@ -94,21 +124,18 @@ def contrastive_step_loss(
     correct_sum = correct_local.sum()
     n_rows_dev = jnp.asarray(b_local, jnp.float32)
 
-    # --- bank-query rows (replicated; each device takes a 1/D share) ---
-    if cq > 0 and cp > 0:
-        c_align = min(cq, cp)
-        labels_bank = (b_g + n_hard + jnp.arange(cq, dtype=jnp.int32)) % (
-            b_g + n_hard + cp
+    # --- extra rows (replicated; each device takes a 1/D share) ---
+    if extra_rows is not None and extra_rows.reps.shape[0] > 0 and n_extra > 0:
+        labels_extra = (b_g + n_hard + extra_rows.labels.astype(jnp.int32)) % (
+            b_g + n_hard + n_extra
         )
-        per_row_bank, correct_bank = row_stats(
-            bank_q.buf.astype(q_local.dtype), labels_bank
+        per_row_extra, correct_extra = row_stats(
+            extra_rows.reps.astype(q_local.dtype), labels_extra
         )
-        aligned = jnp.zeros((cq,), dtype=bool)
-        aligned = aligned.at[:c_align].set(bank_q.valid[:c_align] & bank_p.valid[:c_align])
-        w = aligned.astype(jnp.float32)
+        w = extra_rows.weight.astype(jnp.float32)
         inv_d = 1.0 / ctx.device_count()
-        loss_sum = loss_sum + inv_d * jnp.sum(per_row_bank * w)
-        correct_sum = correct_sum + inv_d * jnp.sum(correct_bank * w)
+        loss_sum = loss_sum + inv_d * jnp.sum(per_row_extra * w)
+        correct_sum = correct_sum + inv_d * jnp.sum(correct_extra * w)
         n_rows_dev = n_rows_dev + inv_d * w.sum()
 
     n_rows_g = jax.lax.stop_gradient(ctx.psum(n_rows_dev))
@@ -124,3 +151,50 @@ def contrastive_step_loss(
         p_global=jax.lax.stop_gradient(p_pos),
     )
     return loss_dev, aux
+
+
+def bank_extra_columns(bank_p: Optional[BankState]) -> Optional[ExtraColumns]:
+    """Passage bank -> extra similarity columns (None when disabled)."""
+    if bank_p is None or bank_p.buf.shape[0] == 0:
+        return None
+    reps, valid = columns_view(bank_p)
+    return ExtraColumns(reps=reps, valid=valid)
+
+
+def bank_extra_rows(
+    bank_q: Optional[BankState], bank_p: Optional[BankState]
+) -> Optional[ExtraRows]:
+    """Dual banks -> extra query rows labeled with their lockstep-aligned
+    positives in the passage bank (None unless both banks are enabled)."""
+    if bank_q is None or bank_q.buf.shape[0] == 0:
+        return None
+    if bank_p is None or bank_p.buf.shape[0] == 0:
+        return None
+    cq = bank_q.buf.shape[0]
+    return ExtraRows(
+        reps=bank_q.buf,
+        labels=jnp.arange(cq, dtype=jnp.int32),
+        weight=aligned_valid(bank_q, bank_p).astype(jnp.float32),
+    )
+
+
+def contrastive_step_loss(
+    q_local: jnp.ndarray,
+    p_pos_local: jnp.ndarray,
+    p_hard_local: Optional[jnp.ndarray],
+    bank_q: Optional[BankState],
+    bank_p: Optional[BankState],
+    *,
+    temperature: float = 1.0,
+    ctx: Optional[DistCtx] = None,
+) -> tuple[jnp.ndarray, LossAux]:
+    """Legacy bank-taking entry point: dual banks -> extras -> loss."""
+    return contrastive_loss(
+        q_local,
+        p_pos_local,
+        p_hard_local,
+        extra_cols=bank_extra_columns(bank_p),
+        extra_rows=bank_extra_rows(bank_q, bank_p),
+        temperature=temperature,
+        ctx=ctx,
+    )

@@ -40,18 +40,25 @@ def push(bank: BankState, x: jnp.ndarray, step: jnp.ndarray | int = 0) -> BankSt
 
     ``x`` is stored with stop_gradient: bank entries never carry activations
     (paper Eq. 5-6, sg(.)). n may exceed capacity; the last ``capacity`` rows
-    win, matching FIFO semantics.
+    win, matching FIFO semantics. Oversized pushes are pre-sliced to those
+    final ``capacity`` rows before the scatter — ``.at[idx].set`` with
+    duplicate ring indices does not guarantee last-write-wins.
     """
     x = jax.lax.stop_gradient(x)
     n = x.shape[0]
     cap = bank.buf.shape[0]
-    if n == 0:
+    if n == 0 or cap == 0:
         return bank
-    idx = (bank.head + jnp.arange(n, dtype=jnp.int32)) % cap
+    start = bank.head
+    if n > cap:
+        x = x[n - cap :]
+        start = bank.head + (n - cap)
+        n = cap
+    idx = (start + jnp.arange(n, dtype=jnp.int32)) % cap
     buf = bank.buf.at[idx].set(x.astype(bank.buf.dtype))
     valid = bank.valid.at[idx].set(True)
     age = bank.age.at[idx].set(jnp.asarray(step, dtype=jnp.int32))
-    head = (bank.head + n) % cap
+    head = (start + n) % cap
     return BankState(buf=buf, valid=valid, head=head, age=age)
 
 
@@ -83,6 +90,31 @@ def push_pair(
     in M_p (required for the extended-loss label alignment)."""
     assert q.shape[0] == p.shape[0], "dual banks must be pushed in lockstep"
     return push(bank_q, q, step), push(bank_p, p, step)
+
+
+def capacity(bank: BankState) -> int:
+    """Static capacity of the ring (0 for a disabled bank)."""
+    return bank.buf.shape[0]
+
+
+def columns_view(bank: BankState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(reps, valid) of a bank used as extra similarity *columns*.
+
+    Source-facing helper: NegativeSource implementations hand this to the loss
+    as an ``ExtraColumns`` block; order is irrelevant for columns, so no roll.
+    """
+    return bank.buf, bank.valid
+
+
+def aligned_valid(bank_q: BankState, bank_p: BankState) -> jnp.ndarray:
+    """(cq,) bool — slots where bank_q row i and bank_p row i hold an aligned
+    (query, positive-passage) pair. Pushed-in-lockstep banks (push_pair) are
+    aligned by ring index; with unequal capacities only the common prefix can
+    ever align (the pre-batch ablation has cq == 0, so no rows)."""
+    cq, cp = bank_q.buf.shape[0], bank_p.buf.shape[0]
+    c_align = min(cq, cp)
+    aligned = jnp.zeros((cq,), dtype=bool)
+    return aligned.at[:c_align].set(bank_q.valid[:c_align] & bank_p.valid[:c_align])
 
 
 def ordered(bank: BankState) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,313 +1,66 @@
-"""The four training methods compared in the paper, as composable update
-builders sharing one loss (core/loss.py) and one optimizer interface.
+"""The paper's training methods behind one switch — now a thin registry over
+`StepProgram` compositions (core/step_program.py).
 
-  - ``dpr``        : full-batch InfoNCE (paper's high-resource baseline).
-  - ``grad_accum`` : K local chunks, loss per chunk (Eq. 4) — fewer negatives.
-  - ``grad_cache`` : decomposed backprop (Gao et al. 2021). Representations are
-                     computed chunk-wise without stored activations, the
-                     full-batch loss is differentiated w.r.t. the
-                     representations only, and per-chunk VJPs inject those
-                     cotangents back through the encoders. Gradients are
-                     *exactly* the full-batch gradients (tested).
-  - ``contaccum``  : the paper's contribution — GradAccum + dual FIFO memory
-                     banks extending the similarity matrix (Eq. 5-7).
+Each ``method=`` string names a (negative source x backprop strategy) pair:
+
+  - ``dpr``        : direct x in-batch — full-batch InfoNCE (the paper's
+                     high-resource baseline).
+  - ``grad_accum`` : scan-accumulate x in-batch — K local chunks, loss per
+                     chunk (Eq. 4), fewer negatives.
+  - ``grad_cache`` : rep-cache VJP x in-batch — decomposed backprop (Gao et
+                     al. 2021); gradients are *exactly* the full-batch
+                     gradients (tested).
+  - ``contaccum``  : scan-accumulate x dual-bank — the paper's contribution:
+                     GradAccum + dual FIFO memory banks extending the
+                     similarity matrix (Eq. 5-7).
+  - ``contcache``  : rep-cache VJP x dual-bank — exact full-batch backprop
+                     *and* bank-extended negatives.
+  - ``prebatch``   : scan-accumulate x passage-bank (pre-batch ablation).
+  - ``prebatch_cache``: rep-cache VJP x passage-bank.
+  - ``dpr_xdev``   : direct x cross-device-gathered in-batch negatives.
 
 Every builder returns ``update(state, batch) -> (state, StepMetrics)``; all
-are pure and jit/shard_map-compatible.
+are pure and jit/shard_map-compatible. Prefer ``build_step_program`` for the
+full program handle (source/strategy introspection); ``make_update_fn`` and
+the per-method ``make_*_update`` builders remain as the legacy surface.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro.common.treemath import tree_add, tree_scale, tree_zeros_like, tree_global_norm
-from repro.core.dist import DistCtx
-from repro.core.loss import LossAux, contrastive_step_loss
-from repro.core.memory_bank import BankState, clear, init_bank, push_pair
-from repro.core.types import (
-    ContrastiveConfig,
-    ContrastiveState,
-    DualEncoder,
-    RetrievalBatch,
-    StepMetrics,
-    chunk_tree,
-    flatten_hard,
-    subtree_norm,
+from repro.core.step_program import (  # noqa: F401  (re-exported API)
+    COMPOSITIONS,
+    SOURCES,
+    STRATEGIES,
+    StepProgram,
+    available_methods,
+    build_step_program,
+    init_state,
+    method_composition,
+    method_needs_mesh,
+    method_uses_banks,
 )
-from repro.optim.adamw import GradientTransformation, apply_updates
-
-
-def init_state(
-    rng: jax.Array,
-    encoder: DualEncoder,
-    tx: GradientTransformation,
-    cfg: ContrastiveConfig,
-    params: Optional[Any] = None,
-    bank_dim: Optional[int] = None,
-) -> ContrastiveState:
-    if params is None:
-        params = encoder.init(rng)
-    nq, np_ = cfg.resolved_bank_sizes()
-    d = bank_dim or encoder.rep_dim
-    return ContrastiveState(
-        step=jnp.zeros((), jnp.int32),
-        params=params,
-        opt_state=tx.init(params),
-        bank_q=init_bank(nq, d, cfg.bank_dtype),
-        bank_p=init_bank(np_, d, cfg.bank_dtype),
-    )
-
-
-def _encode_chunk(encoder: DualEncoder, params, chunk: RetrievalBatch):
-    q = encoder.encode_query(params, chunk.query)
-    pp = encoder.encode_passage(params, chunk.passage_pos)
-    ph = None
-    if chunk.passage_hard is not None:
-        ph = encoder.encode_passage(params, flatten_hard(chunk.passage_hard))
-    return q, pp, ph
-
-
-def _metrics(grads, aux: LossAux, bank_q: BankState, bank_p: BankState) -> StepMetrics:
-    gq = subtree_norm(grads, "query")
-    gp = subtree_norm(grads, "passage")
-    return StepMetrics(
-        loss=aux.loss,
-        accuracy=aux.accuracy,
-        grad_norm=tree_global_norm(grads),
-        grad_norm_query=gq,
-        grad_norm_passage=gp,
-        grad_norm_ratio=gp / jnp.maximum(gq, 1e-12),
-        n_negatives=aux.n_negatives,
-        bank_fill_q=bank_q.valid.sum().astype(jnp.float32) if bank_q.buf.shape[0] else jnp.zeros(()),
-        bank_fill_p=bank_p.valid.sum().astype(jnp.float32) if bank_p.buf.shape[0] else jnp.zeros(()),
-    )
-
-
-def _apply(state: ContrastiveState, grads, tx, bank_q, bank_p) -> ContrastiveState:
-    updates, opt_state = tx.update(grads, state.opt_state, state.params)
-    params = apply_updates(state.params, updates)
-    return ContrastiveState(
-        step=state.step + 1,
-        params=params,
-        opt_state=opt_state,
-        bank_q=bank_q,
-        bank_p=bank_p,
-    )
-
-
-# --------------------------------------------------------------------------
-# DPR: full batch in one forward/backward.
-# --------------------------------------------------------------------------
-def make_dpr_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
-    ctx = DistCtx(cfg.dp_axis)
-
-    def update(state: ContrastiveState, batch: RetrievalBatch):
-        def loss_fn(params):
-            q, pp, ph = _encode_chunk(encoder, params, batch)
-            return contrastive_step_loss(
-                q, pp, ph, None, None, temperature=cfg.temperature, ctx=ctx
-            )
-
-        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
-        grads = ctx.psum_tree(grads)
-        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
-        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
-
-    return update
-
-
-# --------------------------------------------------------------------------
-# GradAccum: K chunks, loss restricted to each chunk (paper Eq. 4).
-# --------------------------------------------------------------------------
-def make_grad_accum_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
-    ctx = DistCtx(cfg.dp_axis)
-    k = cfg.accumulation_steps
-
-    def update(state: ContrastiveState, batch: RetrievalBatch):
-        chunks = RetrievalBatch(
-            query=chunk_tree(batch.query, k),
-            passage_pos=chunk_tree(batch.passage_pos, k),
-            passage_hard=None
-            if batch.passage_hard is None
-            else chunk_tree(batch.passage_hard, k),
-        )
-
-        def body(grads_acc, chunk):
-            def loss_fn(params):
-                q, pp, ph = _encode_chunk(encoder, params, chunk)
-                return contrastive_step_loss(
-                    q, pp, ph, None, None, temperature=cfg.temperature, ctx=ctx
-                )
-
-            (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
-            return tree_add(grads_acc, g), aux
-
-        grads, auxs = jax.lax.scan(
-            body,
-            tree_zeros_like(state.params),
-            chunks,
-        )
-        grads = ctx.psum_tree(tree_scale(grads, 1.0 / k))
-        aux = LossAux(
-            loss=auxs.loss.mean(),
-            accuracy=auxs.accuracy.mean(),
-            n_rows=auxs.n_rows.sum(),
-            n_negatives=auxs.n_negatives.mean(),
-            q_global=auxs.q_global,
-            p_global=auxs.p_global,
-        )
-        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
-        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
-
-    return update
-
-
-# --------------------------------------------------------------------------
-# GradCache: decomposed backprop; gradients == full-batch gradients.
-# --------------------------------------------------------------------------
-def make_grad_cache_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
-    ctx = DistCtx(cfg.dp_axis)
-    k = cfg.accumulation_steps
-
-    def update(state: ContrastiveState, batch: RetrievalBatch):
-        chunks = RetrievalBatch(
-            query=chunk_tree(batch.query, k),
-            passage_pos=chunk_tree(batch.passage_pos, k),
-            passage_hard=None
-            if batch.passage_hard is None
-            else chunk_tree(batch.passage_hard, k),
-        )
-        has_hard = batch.passage_hard is not None
-
-        # Stage 1: representation-only forward, chunk by chunk, no stored
-        # activations for the loss graph (stop_gradient == GradCache's
-        # torch.no_grad forward).
-        def fwd(_, chunk):
-            q, pp, ph = _encode_chunk(encoder, state.params, chunk)
-            ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
-            return None, (q, pp, ph)
-
-        _, (qs, pps, phs) = jax.lax.scan(fwd, None, chunks)
-        qs, pps, phs = map(jax.lax.stop_gradient, (qs, pps, phs))
-
-        def merge(x):  # (K, local, d) -> (K*local, d)
-            return x.reshape((-1, x.shape[-1]))
-
-        # Stage 2: d loss / d representations (the "gradient cache").
-        def rep_loss(q_all, pp_all, ph_all):
-            return contrastive_step_loss(
-                q_all,
-                pp_all,
-                ph_all if has_hard else None,
-                None,
-                None,
-                temperature=cfg.temperature,
-                ctx=ctx,
-            )
-
-        (_, aux), rep_grads = jax.value_and_grad(rep_loss, argnums=(0, 1, 2), has_aux=True)(
-            merge(qs), merge(pps), merge(phs)
-        )
-        gq = rep_grads[0].reshape(qs.shape)
-        gpp = rep_grads[1].reshape(pps.shape)
-        gph = rep_grads[2].reshape(phs.shape)
-
-        # Stage 3: per-chunk VJP through the encoders, seeded with the cached
-        # representation gradients. Activations exist for one chunk at a time.
-        def bwd(grads_acc, inp):
-            chunk, (gq_k, gpp_k, gph_k) = inp
-
-            def enc(params):
-                q, pp, ph = _encode_chunk(encoder, params, chunk)
-                ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
-                return (q, pp, ph)
-
-            _, vjp_fn = jax.vjp(enc, state.params)
-            (g,) = vjp_fn((gq_k, gpp_k, gph_k))
-            return tree_add(grads_acc, g), None
-
-        grads, _ = jax.lax.scan(
-            bwd, tree_zeros_like(state.params), (chunks, (gq, gpp, gph))
-        )
-        grads = ctx.psum_tree(grads)
-        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
-        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
-
-    return update
-
-
-# --------------------------------------------------------------------------
-# ContAccum: GradAccum + dual memory banks (the paper's method).
-# --------------------------------------------------------------------------
-def make_contaccum_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
-    ctx = DistCtx(cfg.dp_axis)
-    k = cfg.accumulation_steps
-
-    def update(state: ContrastiveState, batch: RetrievalBatch):
-        chunks = RetrievalBatch(
-            query=chunk_tree(batch.query, k),
-            passage_pos=chunk_tree(batch.passage_pos, k),
-            passage_hard=None
-            if batch.passage_hard is None
-            else chunk_tree(batch.passage_hard, k),
-        )
-        bank_q0 = clear(state.bank_q) if cfg.reset_banks_each_update else state.bank_q
-        bank_p0 = clear(state.bank_p) if cfg.reset_banks_each_update else state.bank_p
-
-        def body(carry, chunk):
-            grads_acc, bank_q, bank_p = carry
-
-            def loss_fn(params):
-                q, pp, ph = _encode_chunk(encoder, params, chunk)
-                return contrastive_step_loss(
-                    q,
-                    pp,
-                    ph,
-                    bank_q,
-                    bank_p,
-                    temperature=cfg.temperature,
-                    ctx=ctx,
-                )
-
-            (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
-            # Enqueue the *global* representations (identical on all devices in
-            # distributed mode -> banks stay replicated).
-            bank_q, bank_p = push_pair(bank_q, bank_p, aux.q_global, aux.p_global, state.step)
-            return (tree_add(grads_acc, g), bank_q, bank_p), aux
-
-        (grads, bank_q, bank_p), auxs = jax.lax.scan(
-            body, (tree_zeros_like(state.params), bank_q0, bank_p0), chunks
-        )
-        grads = ctx.psum_tree(tree_scale(grads, 1.0 / k))
-        aux = LossAux(
-            loss=auxs.loss.mean(),
-            accuracy=auxs.accuracy.mean(),
-            n_rows=auxs.n_rows.sum(),
-            n_negatives=auxs.n_negatives.mean(),
-            q_global=auxs.q_global,
-            p_global=auxs.p_global,
-        )
-        new_state = _apply(state, grads, tx, bank_q, bank_p)
-        return new_state, _metrics(grads, aux, bank_q, bank_p)
-
-    return update
-
-
-_BUILDERS: dict[str, Callable] = {
-    "dpr": make_dpr_update,
-    "grad_accum": make_grad_accum_update,
-    "grad_cache": make_grad_cache_update,
-    "contaccum": make_contaccum_update,
-}
+from repro.core.types import ContrastiveConfig, DualEncoder
+from repro.optim.adamw import GradientTransformation
 
 
 def make_update_fn(encoder: DualEncoder, tx: GradientTransformation, cfg: ContrastiveConfig):
-    """Factory: the paper's four methods behind one switch."""
-    if cfg.method not in _BUILDERS:
-        raise ValueError(f"unknown method {cfg.method!r}; one of {sorted(_BUILDERS)}")
-    if cfg.method in ("grad_accum", "grad_cache") and cfg.accumulation_steps < 1:
-        raise ValueError("accumulation_steps must be >= 1")
-    return _BUILDERS[cfg.method](encoder, tx, cfg)
+    """Factory: the registered methods behind one switch."""
+    return build_step_program(encoder, tx, cfg).update
+
+
+def _fixed_method(method: str):
+    def make(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
+        cfg = dataclasses.replace(cfg, method=method, negatives=None, backprop=None)
+        return make_update_fn(encoder, tx, cfg)
+
+    make.__name__ = f"make_{method}_update"
+    make.__doc__ = f"Legacy per-method builder: forces method={method!r}."
+    return make
+
+
+make_dpr_update = _fixed_method("dpr")
+make_grad_accum_update = _fixed_method("grad_accum")
+make_grad_cache_update = _fixed_method("grad_cache")
+make_contaccum_update = _fixed_method("contaccum")

@@ -1,0 +1,572 @@
+"""Composable contrastive update construction: the `StepProgram` API.
+
+The paper's four methods (and the useful configurations beyond them) are
+points in a 2-D design space:
+
+  * **where negatives come from** — a ``NegativeSource``: in-batch only,
+    dual FIFO memory banks (ContAccum), a passage-only bank (pre-batch
+    negatives), or cross-device-gathered in-batch negatives. A source owns
+    its slice of the similarity matrix (extra columns / rows + masks, built
+    on core/loss.py's ExtraColumns/ExtraRows) and the bank state carried
+    across accumulation chunks.
+
+  * **how the backward pass is scheduled** — a ``BackpropStrategy``: direct
+    (one forward/backward over the whole batch), scan-accumulate (K chunks,
+    loss restricted to each chunk — paper Eq. 4), or rep-cache VJP
+    (GradCache's decomposition, Gao et al. 2021: representation-only
+    forward, loss differentiated w.r.t. the representations, per-chunk VJPs
+    through the encoders — full-batch gradients at chunked memory).
+
+``build_step_program(encoder, tx, cfg)`` combines one of each into an
+``update(state, batch) -> (state, StepMetrics)`` that also owns metric
+assembly and bank pushes; all programs are pure and jit/shard_map
+compatible. The legacy ``method=`` strings are a thin registry over
+compositions (COMPOSITIONS):
+
+    dpr            = direct          x in-batch
+    grad_accum     = scan-accumulate x in-batch
+    grad_cache     = rep-cache VJP   x in-batch
+    contaccum      = scan-accumulate x dual-bank     (the paper's method)
+    contcache      = rep-cache VJP   x dual-bank     (new: exact full-batch
+                     backprop *and* bank-extended negatives)
+    prebatch       = scan-accumulate x passage-bank  (pre-batch ablation)
+    prebatch_cache = rep-cache VJP   x passage-bank  (new)
+    dpr_xdev       = direct          x gathered      (cross-device in-batch)
+
+The four legacy compositions are gradient-exact against the original
+monolithic implementations (tests/test_step_program.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.treemath import tree_add, tree_scale, tree_zeros_like, tree_global_norm
+from repro.core.dist import DistCtx
+from repro.core.loss import (
+    LossAux,
+    bank_extra_columns,
+    bank_extra_rows,
+    contrastive_loss,
+)
+from repro.core.memory_bank import BankState, clear, init_bank, push, push_pair
+from repro.core.types import (
+    ContrastiveConfig,
+    ContrastiveState,
+    DualEncoder,
+    RetrievalBatch,
+    StepMetrics,
+    chunk_tree,
+    flatten_hard,
+    subtree_norm,
+)
+from repro.optim.adamw import GradientTransformation, apply_updates
+
+# Bank state threaded across chunks by every program: (bank_q, bank_p).
+# Sources without banks carry 0-capacity rings so the scan carry keeps a
+# uniform pytree structure.
+Carry = Tuple[BankState, BankState]
+
+
+# --------------------------------------------------------------------------
+# NegativeSource protocol + implementations
+# --------------------------------------------------------------------------
+class NegativeSource(Protocol):
+    """Where the negatives of one loss evaluation come from."""
+
+    name: str
+    uses_banks: bool   # does this source read/write the FIFO banks?
+    needs_mesh: bool   # does this source require cfg.dp_axis (a mesh)?
+
+    def bank_sizes(self, cfg: ContrastiveConfig) -> Tuple[int, int]:
+        """(capacity_q, capacity_p) this source wants allocated in state."""
+        ...
+
+    def validate(self, cfg: ContrastiveConfig) -> None:
+        """Raise ValueError for configs this source cannot serve."""
+        ...
+
+    def begin(self, state: ContrastiveState, cfg: ContrastiveConfig) -> Carry:
+        """Bank carry at the start of one update."""
+        ...
+
+    def loss(
+        self,
+        q: jnp.ndarray,
+        pp: jnp.ndarray,
+        ph: Optional[jnp.ndarray],
+        carry: Carry,
+        *,
+        temperature: float,
+        ctx: DistCtx,
+    ) -> Tuple[jnp.ndarray, LossAux]:
+        """One loss evaluation with this source's columns/rows/masks."""
+        ...
+
+    def push(self, carry: Carry, aux: LossAux, step: jnp.ndarray) -> Carry:
+        """Update carried state after one loss evaluation (bank pushes)."""
+        ...
+
+
+class InBatchNegatives:
+    """Plain in-batch negatives (DPR / GradAccum / GradCache): no extras.
+
+    Banks in state are allocated per cfg for layout compatibility but never
+    read or written."""
+
+    name = "in_batch"
+    uses_banks = False
+    needs_mesh = False
+
+    def bank_sizes(self, cfg):
+        return cfg.resolved_bank_sizes()
+
+    def validate(self, cfg):
+        pass
+
+    def begin(self, state, cfg):
+        return (state.bank_q, state.bank_p)
+
+    def loss(self, q, pp, ph, carry, *, temperature, ctx):
+        return contrastive_loss(q, pp, ph, temperature=temperature, ctx=ctx)
+
+    def push(self, carry, aux, step):
+        return carry
+
+
+class GatheredInBatch(InBatchNegatives):
+    """Cross-device in-batch negatives: identical math to ``in_batch`` (the
+    loss all-gathers columns whenever cfg.dp_axis names mesh axes) but states
+    the intent and refuses to build without a DP axis."""
+
+    name = "gathered"
+    needs_mesh = True
+
+    def validate(self, cfg):
+        if cfg.dp_axis is None:
+            raise ValueError(
+                "negatives='gathered' needs cfg.dp_axis naming the mesh axes "
+                "to all-gather representations over"
+            )
+
+
+class DualBankNegatives:
+    """The paper's dual FIFO memory banks (Sec. 3.2): the passage bank
+    extends the columns, the query bank adds extra rows labeled with their
+    lockstep-aligned bank positives; both are pushed after every loss
+    evaluation."""
+
+    name = "dual_bank"
+    uses_banks = True
+    needs_mesh = False
+
+    def bank_sizes(self, cfg):
+        return cfg.resolved_bank_sizes()
+
+    def validate(self, cfg):
+        # bank-less dual-bank degrades exactly to in-batch; allowed (the
+        # warm-up / reduction identities rely on it)
+        pass
+
+    def begin(self, state, cfg):
+        if cfg.reset_banks_each_update:
+            return (clear(state.bank_q), clear(state.bank_p))
+        return (state.bank_q, state.bank_p)
+
+    def loss(self, q, pp, ph, carry, *, temperature, ctx):
+        bank_q, bank_p = carry
+        return contrastive_loss(
+            q,
+            pp,
+            ph,
+            extra_cols=bank_extra_columns(bank_p),
+            extra_rows=bank_extra_rows(bank_q, bank_p),
+            temperature=temperature,
+            ctx=ctx,
+        )
+
+    def push(self, carry, aux, step):
+        bank_q, bank_p = carry
+        # Enqueue the *global* representations (identical on all devices in
+        # distributed mode -> banks stay replicated).
+        return push_pair(bank_q, bank_p, aux.q_global, aux.p_global, step)
+
+
+class PassageBankNegatives(DualBankNegatives):
+    """Passage-only bank — the 'pre-batch negatives' ablation (w/o M_q,
+    Table 2): columns are extended, no extra rows, only passages pushed."""
+
+    name = "passage_bank"
+
+    def bank_sizes(self, cfg):
+        # query bank disabled; the passage bank is the whole source
+        _, np_ = cfg.resolved_bank_sizes()
+        return 0, np_
+
+    def loss(self, q, pp, ph, carry, *, temperature, ctx):
+        _, bank_p = carry
+        return contrastive_loss(
+            q,
+            pp,
+            ph,
+            extra_cols=bank_extra_columns(bank_p),
+            temperature=temperature,
+            ctx=ctx,
+        )
+
+    def push(self, carry, aux, step):
+        bank_q, bank_p = carry
+        return bank_q, push(bank_p, aux.p_global, step)
+
+
+# --------------------------------------------------------------------------
+# BackpropStrategy protocol + implementations
+# --------------------------------------------------------------------------
+class BackpropStrategy(Protocol):
+    """How encoder gradients are obtained from the source's loss."""
+
+    name: str
+
+    def validate(self, cfg: ContrastiveConfig) -> None:
+        ...
+
+    def compute(
+        self,
+        encoder: DualEncoder,
+        params: Any,
+        batch: RetrievalBatch,
+        source: NegativeSource,
+        carry: Carry,
+        step: jnp.ndarray,
+        cfg: ContrastiveConfig,
+        ctx: DistCtx,
+    ) -> Tuple[Any, LossAux, Carry]:
+        """Returns (psum'ed grads, reduced aux, final carry)."""
+        ...
+
+
+def _encode_chunk(encoder: DualEncoder, params, chunk: RetrievalBatch):
+    q = encoder.encode_query(params, chunk.query)
+    pp = encoder.encode_passage(params, chunk.passage_pos)
+    ph = None
+    if chunk.passage_hard is not None:
+        ph = encoder.encode_passage(params, flatten_hard(chunk.passage_hard))
+    return q, pp, ph
+
+
+def _chunk_batch(batch: RetrievalBatch, k: int) -> RetrievalBatch:
+    return RetrievalBatch(
+        query=chunk_tree(batch.query, k),
+        passage_pos=chunk_tree(batch.passage_pos, k),
+        passage_hard=None
+        if batch.passage_hard is None
+        else chunk_tree(batch.passage_hard, k),
+    )
+
+
+def _reduce_scanned_aux(auxs: LossAux) -> LossAux:
+    return LossAux(
+        loss=auxs.loss.mean(),
+        accuracy=auxs.accuracy.mean(),
+        n_rows=auxs.n_rows.sum(),
+        n_negatives=auxs.n_negatives.mean(),
+        q_global=auxs.q_global,
+        p_global=auxs.p_global,
+    )
+
+
+class DirectBackprop:
+    """One forward/backward over the whole batch (full activation memory)."""
+
+    name = "direct"
+
+    def validate(self, cfg):
+        pass
+
+    def compute(self, encoder, params, batch, source, carry, step, cfg, ctx):
+        def loss_fn(p):
+            q, pp, ph = _encode_chunk(encoder, p, batch)
+            return source.loss(q, pp, ph, carry, temperature=cfg.temperature, ctx=ctx)
+
+        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = ctx.psum_tree(grads)
+        carry = source.push(carry, aux, step)
+        return grads, aux, carry
+
+
+class ScanAccumulate:
+    """K chunks under jax.lax.scan, loss restricted to each chunk (paper
+    Eq. 4); the source's carry (banks) threads through the scan, so each
+    chunk sees every previous chunk's pushes."""
+
+    name = "scan"
+
+    def validate(self, cfg):
+        if cfg.accumulation_steps < 1:
+            raise ValueError("accumulation_steps must be >= 1")
+
+    def compute(self, encoder, params, batch, source, carry, step, cfg, ctx):
+        k = cfg.accumulation_steps
+        chunks = _chunk_batch(batch, k)
+
+        def body(c, chunk):
+            grads_acc, carry_ = c
+
+            def loss_fn(p):
+                q, pp, ph = _encode_chunk(encoder, p, chunk)
+                return source.loss(
+                    q, pp, ph, carry_, temperature=cfg.temperature, ctx=ctx
+                )
+
+            (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            carry_ = source.push(carry_, aux, step)
+            return (tree_add(grads_acc, g), carry_), aux
+
+        (grads, carry), auxs = jax.lax.scan(
+            body, (tree_zeros_like(params), carry), chunks
+        )
+        grads = ctx.psum_tree(tree_scale(grads, 1.0 / k))
+        return grads, _reduce_scanned_aux(auxs), carry
+
+
+class RepCacheVJP:
+    """GradCache's decomposed backprop (Gao et al. 2021): representations are
+    computed chunk-wise without stored activations, the source's loss is
+    differentiated w.r.t. the representations only (the "gradient cache"),
+    and per-chunk VJPs inject those cotangents back through the encoders.
+    Gradients are *exactly* the direct full-batch gradients of the same loss
+    (tested) at chunked activation memory — composed with a bank source this
+    yields full-batch backprop *plus* bank-extended negatives."""
+
+    name = "rep_cache"
+
+    def validate(self, cfg):
+        if cfg.accumulation_steps < 1:
+            raise ValueError("accumulation_steps must be >= 1")
+
+    def compute(self, encoder, params, batch, source, carry, step, cfg, ctx):
+        k = cfg.accumulation_steps
+        chunks = _chunk_batch(batch, k)
+        has_hard = batch.passage_hard is not None
+
+        # Stage 1: representation-only forward, chunk by chunk, no stored
+        # activations for the loss graph (stop_gradient == GradCache's
+        # torch.no_grad forward).
+        def fwd(_, chunk):
+            q, pp, ph = _encode_chunk(encoder, params, chunk)
+            ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
+            return None, (q, pp, ph)
+
+        _, (qs, pps, phs) = jax.lax.scan(fwd, None, chunks)
+        qs, pps, phs = map(jax.lax.stop_gradient, (qs, pps, phs))
+
+        def merge(x):  # (K, local, d) -> (K*local, d)
+            return x.reshape((-1, x.shape[-1]))
+
+        # Stage 2: d loss / d representations (the "gradient cache"), with
+        # the source's extra columns/rows in the matrix.
+        def rep_loss(q_all, pp_all, ph_all):
+            return source.loss(
+                q_all,
+                pp_all,
+                ph_all if has_hard else None,
+                carry,
+                temperature=cfg.temperature,
+                ctx=ctx,
+            )
+
+        (_, aux), rep_grads = jax.value_and_grad(rep_loss, argnums=(0, 1, 2), has_aux=True)(
+            merge(qs), merge(pps), merge(phs)
+        )
+        gq = rep_grads[0].reshape(qs.shape)
+        gpp = rep_grads[1].reshape(pps.shape)
+        gph = rep_grads[2].reshape(phs.shape)
+
+        # Stage 3: per-chunk VJP through the encoders, seeded with the cached
+        # representation gradients. Activations exist for one chunk at a time.
+        def bwd(grads_acc, inp):
+            chunk, (gq_k, gpp_k, gph_k) = inp
+
+            def enc(p):
+                q, pp, ph = _encode_chunk(encoder, p, chunk)
+                ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
+                return (q, pp, ph)
+
+            _, vjp_fn = jax.vjp(enc, params)
+            (g,) = vjp_fn((gq_k, gpp_k, gph_k))
+            return tree_add(grads_acc, g), None
+
+        grads, _ = jax.lax.scan(
+            bwd, tree_zeros_like(params), (chunks, (gq, gpp, gph))
+        )
+        grads = ctx.psum_tree(grads)
+        carry = source.push(carry, aux, step)
+        return grads, aux, carry
+
+
+# --------------------------------------------------------------------------
+# Registries + resolution
+# --------------------------------------------------------------------------
+SOURCES: dict[str, NegativeSource] = {
+    s.name: s
+    for s in (
+        InBatchNegatives(),
+        GatheredInBatch(),
+        DualBankNegatives(),
+        PassageBankNegatives(),
+    )
+}
+
+STRATEGIES: dict[str, BackpropStrategy] = {
+    s.name: s for s in (DirectBackprop(), ScanAccumulate(), RepCacheVJP())
+}
+
+# method name -> (negatives, backprop). The first four are the paper's
+# methods (gradient-exact vs. the original implementations); the rest are
+# compositions the monolithic API could not express.
+COMPOSITIONS: dict[str, Tuple[str, str]] = {
+    "dpr": ("in_batch", "direct"),
+    "grad_accum": ("in_batch", "scan"),
+    "grad_cache": ("in_batch", "rep_cache"),
+    "contaccum": ("dual_bank", "scan"),
+    "contcache": ("dual_bank", "rep_cache"),
+    "prebatch": ("passage_bank", "scan"),
+    "prebatch_cache": ("passage_bank", "rep_cache"),
+    "dpr_xdev": ("gathered", "direct"),
+}
+
+
+def available_methods() -> list[str]:
+    """Registered method names (legacy four + new compositions)."""
+    return sorted(COMPOSITIONS)
+
+
+def method_composition(method: str) -> Tuple[str, str]:
+    """Legacy-string resolution: method name -> (negatives, backprop)."""
+    if method not in COMPOSITIONS:
+        raise ValueError(
+            f"unknown method {method!r}; one of {available_methods()}"
+        )
+    return COMPOSITIONS[method]
+
+
+def method_uses_banks(method: str) -> bool:
+    """Does this method's negative source read/write the FIFO banks?"""
+    return SOURCES[method_composition(method)[0]].uses_banks
+
+
+def method_needs_mesh(method: str) -> bool:
+    """Does this method's negative source require cfg.dp_axis (a mesh)?"""
+    return SOURCES[method_composition(method)[0]].needs_mesh
+
+
+def resolve_composition(cfg: ContrastiveConfig) -> Tuple[NegativeSource, BackpropStrategy]:
+    """cfg -> (source, strategy). Explicit ``negatives=``/``backprop=``
+    fields win; unset fields fall back to the legacy ``method=`` string."""
+    neg, bp = cfg.resolved_composition_names()
+    if neg not in SOURCES:
+        raise ValueError(f"unknown negatives {neg!r}; one of {sorted(SOURCES)}")
+    if bp not in STRATEGIES:
+        raise ValueError(f"unknown backprop {bp!r}; one of {sorted(STRATEGIES)}")
+    return SOURCES[neg], STRATEGIES[bp]
+
+
+# --------------------------------------------------------------------------
+# The generic program builder
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepProgram:
+    """A built contrastive update: ``update(state, batch) -> (state,
+    StepMetrics)`` plus the composition it was built from."""
+
+    update: Callable[[ContrastiveState, RetrievalBatch], Tuple[ContrastiveState, StepMetrics]]
+    source: NegativeSource
+    strategy: BackpropStrategy
+    cfg: ContrastiveConfig
+
+    @property
+    def name(self) -> str:
+        for m, (neg, bp) in COMPOSITIONS.items():
+            if (neg, bp) == (self.source.name, self.strategy.name):
+                return m
+        return f"{self.source.name}*{self.strategy.name}"
+
+
+def _metrics(grads, aux: LossAux, bank_q: BankState, bank_p: BankState) -> StepMetrics:
+    gq = subtree_norm(grads, "query")
+    gp = subtree_norm(grads, "passage")
+    return StepMetrics(
+        loss=aux.loss,
+        accuracy=aux.accuracy,
+        grad_norm=tree_global_norm(grads),
+        grad_norm_query=gq,
+        grad_norm_passage=gp,
+        grad_norm_ratio=gp / jnp.maximum(gq, 1e-12),
+        n_negatives=aux.n_negatives,
+        bank_fill_q=bank_q.valid.sum().astype(jnp.float32) if bank_q.buf.shape[0] else jnp.zeros(()),
+        bank_fill_p=bank_p.valid.sum().astype(jnp.float32) if bank_p.buf.shape[0] else jnp.zeros(()),
+    )
+
+
+def _apply(state: ContrastiveState, grads, tx, bank_q, bank_p) -> ContrastiveState:
+    updates, opt_state = tx.update(grads, state.opt_state, state.params)
+    params = apply_updates(state.params, updates)
+    return ContrastiveState(
+        step=state.step + 1,
+        params=params,
+        opt_state=opt_state,
+        bank_q=bank_q,
+        bank_p=bank_p,
+    )
+
+
+def build_step_program(
+    encoder: DualEncoder, tx: GradientTransformation, cfg: ContrastiveConfig
+) -> StepProgram:
+    """Compose cfg's negative source and backprop strategy into one update
+    program. The program owns chunking, loss assembly, bank pushes, the
+    optimizer application and metric assembly; it is pure and serves
+    single-device, shard_map/GSPMD and dry-run paths unchanged."""
+    source, strategy = resolve_composition(cfg)
+    source.validate(cfg)
+    strategy.validate(cfg)
+    ctx = DistCtx(cfg.dp_axis)
+
+    def update(state: ContrastiveState, batch: RetrievalBatch):
+        carry = source.begin(state, cfg)
+        grads, aux, carry = strategy.compute(
+            encoder, state.params, batch, source, carry, state.step, cfg, ctx
+        )
+        bank_q, bank_p = carry
+        new_state = _apply(state, grads, tx, bank_q, bank_p)
+        return new_state, _metrics(grads, aux, bank_q, bank_p)
+
+    return StepProgram(update=update, source=source, strategy=strategy, cfg=cfg)
+
+
+def init_state(
+    rng: jax.Array,
+    encoder: DualEncoder,
+    tx: GradientTransformation,
+    cfg: ContrastiveConfig,
+    params: Optional[Any] = None,
+    bank_dim: Optional[int] = None,
+) -> ContrastiveState:
+    """Initial train state with the bank capacities the cfg's negative
+    source asks for."""
+    if params is None:
+        params = encoder.init(rng)
+    source, _ = resolve_composition(cfg)
+    nq, np_ = source.bank_sizes(cfg)
+    d = bank_dim or encoder.rep_dim
+    return ContrastiveState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=tx.init(params),
+        bank_q=init_bank(nq, d, cfg.bank_dtype),
+        bank_p=init_bank(np_, d, cfg.bank_dtype),
+    )

@@ -39,7 +39,17 @@ class DualEncoder(NamedTuple):
 class ContrastiveConfig:
     """Configuration of the contrastive update (paper Secs. 3.1-3.2).
 
-    method: one of 'dpr' (full batch), 'grad_accum', 'grad_cache', 'contaccum'.
+    The update is a composition *negative source x backprop strategy*
+    (core/step_program.py). Either name a registered composition with
+    ``method=`` (legacy strings: 'dpr', 'grad_accum', 'grad_cache',
+    'contaccum'; new: 'contcache', 'prebatch', 'prebatch_cache',
+    'dpr_xdev'), or set the axes explicitly:
+
+    negatives: 'in_batch' | 'gathered' | 'dual_bank' | 'passage_bank'
+        (None -> resolved from ``method``).
+    backprop: 'direct' | 'scan' | 'rep_cache'
+        (None -> resolved from ``method``). An explicitly set axis overrides
+        the corresponding half of ``method``.
     accumulation_steps: K. Global batch B must be divisible by K.
     bank_size: N_memory (equal for both banks unless overridden — the paper's
         dual-bank symmetry; ``bank_size_q``/``bank_size_p`` override for the
@@ -49,6 +59,8 @@ class ContrastiveConfig:
     """
 
     method: str = "contaccum"
+    negatives: Optional[str] = None
+    backprop: Optional[str] = None
     temperature: float = 1.0
     accumulation_steps: int = 1
     bank_size: int = 0
@@ -68,6 +80,17 @@ class ContrastiveConfig:
         if not self.use_query_bank:
             nq = 0
         return nq, np_
+
+    def resolved_composition_names(self):
+        """(negatives, backprop) names after legacy-``method`` resolution."""
+        from repro.core.step_program import method_composition
+
+        neg, bp = self.negatives, self.backprop
+        if neg is None or bp is None:
+            legacy = method_composition(self.method)
+            neg = neg or legacy[0]
+            bp = bp or legacy[1]
+        return neg, bp
 
 
 class ContrastiveState(NamedTuple):

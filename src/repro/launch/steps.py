@@ -33,7 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.common.treemath import tree_add, tree_scale, tree_zeros_like
 from repro.configs import get_arch, list_archs
 from repro.configs.base import ArchSpec, ShapeCell
-from repro.core.methods import init_state, make_update_fn
+from repro.core.methods import build_step_program, init_state
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.distribution.sharding import (
     BERT_RULES,
@@ -529,7 +529,11 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     if p.get("bf16_compute", True):
         bcfg = dataclasses.replace(bcfg, dtype=jnp.bfloat16)
     ccfg = ContrastiveConfig(
-        method="contaccum",
+        # any registered source x strategy composition; cells default to the
+        # paper's contaccum but can select e.g. contcache / prebatch_cache
+        method=p.get("method", "contaccum"),
+        negatives=p.get("negatives"),
+        backprop=p.get("backprop"),
         accumulation_steps=p["accum_steps"],
         bank_size=p["bank_size"],
         temperature=1.0,
@@ -542,7 +546,8 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
         clip_by_global_norm(2.0),
         adamw(linear_warmup_linear_decay(2e-5, 1237, 50_000)),
     )
-    update = make_update_fn(enc, tx, ccfg)
+    program = build_step_program(enc, tx, ccfg)
+    update = program.update
 
     state_s = jax.eval_shape(
         lambda: init_state(jax.random.PRNGKey(0), enc, tx, ccfg)
@@ -557,9 +562,14 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     )
 
     tokens = b * (ql + pl * (1 + h))
-    rows = b // p["accum_steps"] + p["bank_size"]
-    cols = (b // p["accum_steps"]) * (1 + h) + p["bank_size"]
-    sim_flops = 2.0 * rows * cols * bcfg.d_model * 3 * p["accum_steps"]
+    nq, np_ = program.source.bank_sizes(ccfg)
+    if program.strategy.name == "rep_cache":
+        # one full-batch similarity matrix regardless of K
+        rows, cols, n_mats = b + nq, b * (1 + h) + np_, 1
+    else:
+        k_eff = 1 if program.strategy.name == "direct" else p["accum_steps"]
+        rows, cols, n_mats = b // k_eff + nq, (b // k_eff) * (1 + h) + np_, k_eff
+    sim_flops = 2.0 * rows * cols * bcfg.d_model * 3 * n_mats
     return CellProgram(
         arch_id=arch.arch_id, shape_name=cell.name, kind="contrastive",
         fn=update, args=(state, batch), donate_argnums=(0,),
@@ -568,6 +578,9 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "params": 2 * bcfg.param_count(),
             "bank_size": p["bank_size"],
             "accum_steps": p["accum_steps"],
+            "method": program.name,
+            "negatives": program.source.name,
+            "backprop": program.strategy.name,
         },
     )
 

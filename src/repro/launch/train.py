@@ -16,7 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.methods import init_state, make_update_fn
+from repro.core.methods import (
+    available_methods,
+    build_step_program,
+    init_state,
+    method_composition,
+    method_needs_mesh,
+    method_uses_banks,
+)
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
@@ -42,8 +49,10 @@ def tiny_bert(vocab: int = 1000) -> BertConfig:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", default="contaccum",
-                    choices=["dpr", "grad_accum", "grad_cache", "contaccum"])
+    # mesh-requiring compositions can't build in this single-program driver;
+    # only offer methods it can actually run
+    methods = [m for m in available_methods() if not method_needs_mesh(m)]
+    ap.add_argument("--method", default="contaccum", choices=methods)
     ap.add_argument("--total-batch", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--bank", type=int, default=256)
@@ -56,10 +65,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     k = max(args.total_batch // args.local_batch, 1)
+    _, backprop = method_composition(args.method)
     cfg = ContrastiveConfig(
         method=args.method,
-        accumulation_steps=k if args.method != "dpr" else 1,
-        bank_size=args.bank if args.method == "contaccum" else 0,
+        accumulation_steps=k if backprop != "direct" else 1,
+        bank_size=args.bank if method_uses_banks(args.method) else 0,
         temperature=1.0,
         grad_clip_norm=2.0,
     )
@@ -68,7 +78,7 @@ def main(argv=None):
         clip_by_global_norm(cfg.grad_clip_norm),
         adamw(linear_warmup_linear_decay(args.lr, args.steps // 10, args.steps)),
     )
-    update = jax.jit(make_update_fn(enc, tx, cfg), donate_argnums=(0,))
+    update = jax.jit(build_step_program(enc, tx, cfg).update, donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(args.seed), enc, tx, cfg)
 
     corpus = SyntheticRetrievalCorpus(

@@ -1,0 +1,253 @@
+"""Reference implementations for gradient-parity testing.
+
+These are verbatim copies of the original monolithic update builders from
+``core/methods.py`` as of the seed commit (before the `StepProgram`
+redesign). The composed programs must reproduce their gradients, metrics and
+bank evolution exactly — tests/test_step_program.py enforces it. Do NOT
+refactor these to use the new API; their value is being frozen history.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.treemath import tree_add, tree_scale, tree_zeros_like, tree_global_norm
+from repro.core.dist import DistCtx
+from repro.core.loss import LossAux, contrastive_step_loss
+from repro.core.memory_bank import BankState, clear, push_pair
+from repro.core.types import (
+    ContrastiveConfig,
+    ContrastiveState,
+    DualEncoder,
+    RetrievalBatch,
+    StepMetrics,
+    chunk_tree,
+    flatten_hard,
+    subtree_norm,
+)
+
+
+def _encode_chunk(encoder: DualEncoder, params, chunk: RetrievalBatch):
+    q = encoder.encode_query(params, chunk.query)
+    pp = encoder.encode_passage(params, chunk.passage_pos)
+    ph = None
+    if chunk.passage_hard is not None:
+        ph = encoder.encode_passage(params, flatten_hard(chunk.passage_hard))
+    return q, pp, ph
+
+
+def _metrics(grads, aux: LossAux, bank_q: BankState, bank_p: BankState) -> StepMetrics:
+    gq = subtree_norm(grads, "query")
+    gp = subtree_norm(grads, "passage")
+    return StepMetrics(
+        loss=aux.loss,
+        accuracy=aux.accuracy,
+        grad_norm=tree_global_norm(grads),
+        grad_norm_query=gq,
+        grad_norm_passage=gp,
+        grad_norm_ratio=gp / jnp.maximum(gq, 1e-12),
+        n_negatives=aux.n_negatives,
+        bank_fill_q=bank_q.valid.sum().astype(jnp.float32) if bank_q.buf.shape[0] else jnp.zeros(()),
+        bank_fill_p=bank_p.valid.sum().astype(jnp.float32) if bank_p.buf.shape[0] else jnp.zeros(()),
+    )
+
+
+def _apply(state: ContrastiveState, grads, tx, bank_q, bank_p) -> ContrastiveState:
+    updates, opt_state = tx.update(grads, state.opt_state, state.params)
+    from repro.optim.adamw import apply_updates
+
+    params = apply_updates(state.params, updates)
+    return ContrastiveState(
+        step=state.step + 1,
+        params=params,
+        opt_state=opt_state,
+        bank_q=bank_q,
+        bank_p=bank_p,
+    )
+
+
+def make_dpr_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
+    ctx = DistCtx(cfg.dp_axis)
+
+    def update(state: ContrastiveState, batch: RetrievalBatch):
+        def loss_fn(params):
+            q, pp, ph = _encode_chunk(encoder, params, batch)
+            return contrastive_step_loss(
+                q, pp, ph, None, None, temperature=cfg.temperature, ctx=ctx
+            )
+
+        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        grads = ctx.psum_tree(grads)
+        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
+        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
+
+    return update
+
+
+def make_grad_accum_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
+    ctx = DistCtx(cfg.dp_axis)
+    k = cfg.accumulation_steps
+
+    def update(state: ContrastiveState, batch: RetrievalBatch):
+        chunks = RetrievalBatch(
+            query=chunk_tree(batch.query, k),
+            passage_pos=chunk_tree(batch.passage_pos, k),
+            passage_hard=None
+            if batch.passage_hard is None
+            else chunk_tree(batch.passage_hard, k),
+        )
+
+        def body(grads_acc, chunk):
+            def loss_fn(params):
+                q, pp, ph = _encode_chunk(encoder, params, chunk)
+                return contrastive_step_loss(
+                    q, pp, ph, None, None, temperature=cfg.temperature, ctx=ctx
+                )
+
+            (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+            return tree_add(grads_acc, g), aux
+
+        grads, auxs = jax.lax.scan(
+            body,
+            tree_zeros_like(state.params),
+            chunks,
+        )
+        grads = ctx.psum_tree(tree_scale(grads, 1.0 / k))
+        aux = LossAux(
+            loss=auxs.loss.mean(),
+            accuracy=auxs.accuracy.mean(),
+            n_rows=auxs.n_rows.sum(),
+            n_negatives=auxs.n_negatives.mean(),
+            q_global=auxs.q_global,
+            p_global=auxs.p_global,
+        )
+        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
+        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
+
+    return update
+
+
+def make_grad_cache_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
+    ctx = DistCtx(cfg.dp_axis)
+    k = cfg.accumulation_steps
+
+    def update(state: ContrastiveState, batch: RetrievalBatch):
+        chunks = RetrievalBatch(
+            query=chunk_tree(batch.query, k),
+            passage_pos=chunk_tree(batch.passage_pos, k),
+            passage_hard=None
+            if batch.passage_hard is None
+            else chunk_tree(batch.passage_hard, k),
+        )
+        has_hard = batch.passage_hard is not None
+
+        def fwd(_, chunk):
+            q, pp, ph = _encode_chunk(encoder, state.params, chunk)
+            ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
+            return None, (q, pp, ph)
+
+        _, (qs, pps, phs) = jax.lax.scan(fwd, None, chunks)
+        qs, pps, phs = map(jax.lax.stop_gradient, (qs, pps, phs))
+
+        def merge(x):  # (K, local, d) -> (K*local, d)
+            return x.reshape((-1, x.shape[-1]))
+
+        def rep_loss(q_all, pp_all, ph_all):
+            return contrastive_step_loss(
+                q_all,
+                pp_all,
+                ph_all if has_hard else None,
+                None,
+                None,
+                temperature=cfg.temperature,
+                ctx=ctx,
+            )
+
+        (_, aux), rep_grads = jax.value_and_grad(rep_loss, argnums=(0, 1, 2), has_aux=True)(
+            merge(qs), merge(pps), merge(phs)
+        )
+        gq = rep_grads[0].reshape(qs.shape)
+        gpp = rep_grads[1].reshape(pps.shape)
+        gph = rep_grads[2].reshape(phs.shape)
+
+        def bwd(grads_acc, inp):
+            chunk, (gq_k, gpp_k, gph_k) = inp
+
+            def enc(params):
+                q, pp, ph = _encode_chunk(encoder, params, chunk)
+                ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
+                return (q, pp, ph)
+
+            _, vjp_fn = jax.vjp(enc, state.params)
+            (g,) = vjp_fn((gq_k, gpp_k, gph_k))
+            return tree_add(grads_acc, g), None
+
+        grads, _ = jax.lax.scan(
+            bwd, tree_zeros_like(state.params), (chunks, (gq, gpp, gph))
+        )
+        grads = ctx.psum_tree(grads)
+        new_state = _apply(state, grads, tx, state.bank_q, state.bank_p)
+        return new_state, _metrics(grads, aux, state.bank_q, state.bank_p)
+
+    return update
+
+
+def make_contaccum_update(encoder: DualEncoder, tx, cfg: ContrastiveConfig):
+    ctx = DistCtx(cfg.dp_axis)
+    k = cfg.accumulation_steps
+
+    def update(state: ContrastiveState, batch: RetrievalBatch):
+        chunks = RetrievalBatch(
+            query=chunk_tree(batch.query, k),
+            passage_pos=chunk_tree(batch.passage_pos, k),
+            passage_hard=None
+            if batch.passage_hard is None
+            else chunk_tree(batch.passage_hard, k),
+        )
+        bank_q0 = clear(state.bank_q) if cfg.reset_banks_each_update else state.bank_q
+        bank_p0 = clear(state.bank_p) if cfg.reset_banks_each_update else state.bank_p
+
+        def body(carry, chunk):
+            grads_acc, bank_q, bank_p = carry
+
+            def loss_fn(params):
+                q, pp, ph = _encode_chunk(encoder, params, chunk)
+                return contrastive_step_loss(
+                    q,
+                    pp,
+                    ph,
+                    bank_q,
+                    bank_p,
+                    temperature=cfg.temperature,
+                    ctx=ctx,
+                )
+
+            (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+            bank_q, bank_p = push_pair(bank_q, bank_p, aux.q_global, aux.p_global, state.step)
+            return (tree_add(grads_acc, g), bank_q, bank_p), aux
+
+        (grads, bank_q, bank_p), auxs = jax.lax.scan(
+            body, (tree_zeros_like(state.params), bank_q0, bank_p0), chunks
+        )
+        grads = ctx.psum_tree(tree_scale(grads, 1.0 / k))
+        aux = LossAux(
+            loss=auxs.loss.mean(),
+            accuracy=auxs.accuracy.mean(),
+            n_rows=auxs.n_rows.sum(),
+            n_negatives=auxs.n_negatives.mean(),
+            q_global=auxs.q_global,
+            p_global=auxs.p_global,
+        )
+        new_state = _apply(state, grads, tx, bank_q, bank_p)
+        return new_state, _metrics(grads, aux, bank_q, bank_p)
+
+    return update
+
+
+SEED_BUILDERS = {
+    "dpr": make_dpr_update,
+    "grad_accum": make_grad_accum_update,
+    "grad_cache": make_grad_cache_update,
+    "contaccum": make_contaccum_update,
+}

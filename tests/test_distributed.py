@@ -21,8 +21,9 @@ SCRIPT = textwrap.dedent(
     import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
 
-    shard_map = jax.shard_map
     sys.path.insert(0, "tests")
+    from helpers import get_shard_map
+    shard_map, _vma_kw = get_shard_map()
     from helpers import make_mlp_encoder, make_batch
     from repro.core import (
         ContrastiveConfig, RetrievalBatch, init_state, make_update_fn,
@@ -74,7 +75,7 @@ SCRIPT = textwrap.dedent(
                 mesh=mesh,
                 in_specs=(P(), batch_spec),
                 out_specs=(P(), P()),
-                check_vma=False,
+                **_vma_kw,
             )
         update = jax.jit(update)
         losses = []
@@ -86,11 +87,16 @@ SCRIPT = textwrap.dedent(
             losses.append(float(m.loss))
         return state, losses
 
+    # bank sizes for the full-batch (rep_cache) compositions are kept larger
+    # than steps*B so FIFO eviction order (which differs between the
+    # device-major and chunk-major global orders) cannot enter the math
     for method, kw in [
         ("dpr", {}),
         ("grad_accum", dict(k=2)),
         ("grad_cache", dict(k=2)),
         ("contaccum", dict(k=2, bank=16)),
+        ("contcache", dict(k=2, bank=128)),
+        ("prebatch_cache", dict(k=2, bank=128)),
     ]:
         s1, l1 = run(method, None, **kw)
         s8, l8 = run(method, ("pod", "data"), **kw)

@@ -29,6 +29,7 @@ SCRIPT = textwrap.dedent(
         ("schnet", "molecule"),
         ("deepfm", "serve_p99"),
         ("dpr-bert-base", "paper_batch"),
+        ("dpr-bert-base", "contcache_batch"),
     ]
     for arch, shape in cells:
         prog = build_cell(arch, shape, small)
@@ -46,7 +47,7 @@ SCRIPT = textwrap.dedent(
     all_cells = list_cells()
     archs = {a for a, _ in all_cells}
     assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
-    assert len(all_cells) == 42, len(all_cells)
+    assert len(all_cells) == 44, len(all_cells)
     print("CELL_LIST_OK")
     """
 )

@@ -32,6 +32,27 @@ def test_push_larger_than_capacity_keeps_newest():
     assert int(n_valid(bank)) == 3
 
 
+def test_oversized_push_wraparound_is_last_write_wins():
+    """Regression: when n > capacity the ring indices repeat, and a raw
+    ``.at[idx].set`` scatter does not guarantee the later duplicate wins.
+    push() must pre-slice to the final ``capacity`` rows: exact FIFO order,
+    correct head, correct ages — including from a non-zero head."""
+    # n = 2*cap + 1: every slot is hit >= 2 times
+    bank = init_bank(3, 4)
+    bank = push(bank, rows([1, 2]))          # head now 2
+    bank = push(bank, rows([3, 4, 5, 6, 7, 8, 9]), step=7)
+    buf, valid = ordered(bank)
+    np.testing.assert_array_equal(np.asarray(buf[:, 0]), [7, 8, 9])
+    assert bool(valid.all())
+    # head advanced as if all 7 rows were enqueued one by one
+    assert int(bank.head) == (2 + 7) % 3
+    np.testing.assert_array_equal(np.asarray(bank.age), [7, 7, 7])
+    # one more push lands after the newest retained row
+    bank = push(bank, rows([10]))
+    buf, _ = ordered(bank)
+    np.testing.assert_array_equal(np.asarray(buf[:, 0]), [8, 9, 10])
+
+
 def test_clear_invalidates():
     bank = init_bank(4, 4)
     bank = push(bank, rows([1, 2, 3]))

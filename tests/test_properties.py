@@ -7,6 +7,9 @@ data loader and the serving top-k."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.infonce import in_batch_loss, info_nce

@@ -1,0 +1,295 @@
+"""The `StepProgram` composition API (core/step_program.py).
+
+  * Exact gradient parity: the four legacy ``method=`` strings, resolved
+    through the composed (negative source x backprop strategy) registry,
+    must reproduce the seed monolithic implementations (tests/seed_methods.py)
+    bit-for-bit-close over multi-step trajectories — with and without hard
+    negatives and banks.
+  * Registry: every advertised composition builds and jits.
+  * New compositions: ``contcache`` (rep-cache x dual-bank) and
+    ``prebatch_cache`` (rep-cache x passage-only-bank) train end-to-end and
+    reduce to DPR when the banks are empty.
+"""
+
+import dataclasses
+import importlib.util
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    COMPOSITIONS,
+    ContrastiveConfig,
+    RetrievalBatch,
+    available_methods,
+    build_step_program,
+    init_state,
+    make_update_fn,
+    method_composition,
+)
+from repro.optim import adamw, chain, clip_by_global_norm, sgd
+
+from helpers import make_batch, make_mlp_encoder
+from seed_methods import SEED_BUILDERS
+
+LEGACY = ["dpr", "grad_accum", "grad_cache", "contaccum"]
+
+
+def _tx(cfg: ContrastiveConfig):
+    return chain(clip_by_global_norm(cfg.grad_clip_norm), sgd(0.1))
+
+
+def _assert_state_close(sa, sb, msg, rtol=1e-6, atol=1e-8):
+    for a, b in zip(jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=rtol, atol=atol, err_msg=msg
+        )
+
+
+def _run_trajectory(update, state, batches):
+    metrics = []
+    for b in batches:
+        state, m = update(state, b)
+        metrics.append(m)
+    return state, metrics
+
+
+@pytest.mark.parametrize("method", LEGACY)
+@pytest.mark.parametrize("n_hard", [0, 2])
+def test_composed_program_matches_seed_implementation(method, n_hard):
+    """3-step trajectories: params, banks and metrics must track the seed
+    implementation exactly (same inputs, same optimizer)."""
+    enc = make_mlp_encoder()
+    kw = dict(accumulation_steps=1, bank_size=0)
+    if method in ("grad_accum", "grad_cache"):
+        kw = dict(accumulation_steps=4, bank_size=0)
+    if method == "contaccum":
+        kw = dict(accumulation_steps=4, bank_size=12)
+    cfg = ContrastiveConfig(method=method, **kw)
+    tx = _tx(cfg)
+
+    batches = [make_batch(jax.random.PRNGKey(100 + i), 16, n_hard=n_hard) for i in range(3)]
+
+    state0 = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+    seed_update = jax.jit(SEED_BUILDERS[method](enc, tx, cfg))
+    new_update = jax.jit(build_step_program(enc, tx, cfg).update)
+
+    s_seed, m_seed = _run_trajectory(seed_update, state0, batches)
+    s_new, m_new = _run_trajectory(new_update, state0, batches)
+
+    _assert_state_close(s_seed.params, s_new.params, f"{method}: params diverge")
+    _assert_state_close(s_seed.opt_state, s_new.opt_state, f"{method}: opt state")
+    for bank in ("bank_q", "bank_p"):
+        _assert_state_close(
+            getattr(s_seed, bank), getattr(s_new, bank), f"{method}: {bank}"
+        )
+    for ms, mn in zip(m_seed, m_new):
+        for field in ("loss", "accuracy", "grad_norm", "grad_norm_ratio",
+                      "n_negatives", "bank_fill_q", "bank_fill_p"):
+            np.testing.assert_allclose(
+                float(getattr(ms, field)), float(getattr(mn, field)),
+                rtol=1e-5, err_msg=f"{method}: metric {field}",
+            )
+
+
+@pytest.mark.parametrize("method", ["contaccum"])
+def test_parity_under_ablation_flags(method):
+    """Seed parity also holds for the bank ablations (reset-each-update /
+    passage-only via use_query_bank=False)."""
+    enc = make_mlp_encoder()
+    for flags in (dict(reset_banks_each_update=True), dict(use_query_bank=False)):
+        cfg = ContrastiveConfig(
+            method=method, accumulation_steps=2, bank_size=8, **flags
+        )
+        tx = _tx(cfg)
+        state0 = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+        batches = [make_batch(jax.random.PRNGKey(i), 8) for i in range(3)]
+        s_seed, _ = _run_trajectory(jax.jit(SEED_BUILDERS[method](enc, tx, cfg)), state0, batches)
+        s_new, _ = _run_trajectory(jax.jit(build_step_program(enc, tx, cfg).update), state0, batches)
+        _assert_state_close(s_seed.params, s_new.params, f"{flags}: params")
+        _assert_state_close(s_seed.bank_p, s_new.bank_p, f"{flags}: bank_p")
+
+
+def test_every_advertised_composition_builds_and_jits():
+    enc = make_mlp_encoder()
+    batch = make_batch(jax.random.PRNGKey(5), 8, n_hard=1)
+    for method in available_methods():
+        neg, bp = method_composition(method)
+        cfg = ContrastiveConfig(
+            method=method,
+            accumulation_steps=2 if bp != "direct" else 1,
+            bank_size=8 if neg in ("dual_bank", "passage_bank") else 0,
+            dp_axis="dp" if neg == "gathered" else None,
+        )
+        tx = _tx(cfg)
+        program = build_step_program(enc, tx, cfg)
+        assert program.name == method
+        assert program.source.name == neg and program.strategy.name == bp
+        state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+        if neg == "gathered":
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            from helpers import get_shard_map
+
+            shard_map, sm_kw = get_shard_map()
+            mesh = Mesh(np.array(jax.devices()[:1]), ("dp",))
+            spec = RetrievalBatch(query=P("dp"), passage_pos=P("dp"),
+                                  passage_hard=P("dp"))
+            update = jax.jit(shard_map(
+                program.update, mesh=mesh, in_specs=(P(), spec),
+                out_specs=(P(), P()), **sm_kw,
+            ))
+        else:
+            update = jax.jit(program.update)
+        state, m = update(state, batch)
+        assert np.isfinite(float(m.loss)), method
+        for leaf in jax.tree_util.tree_leaves(state.params):
+            assert np.all(np.isfinite(np.asarray(leaf))), method
+
+
+def test_explicit_axes_override_method_string():
+    """negatives=/backprop= fields compose freely and win over method=."""
+    enc = make_mlp_encoder()
+    batch = make_batch(jax.random.PRNGKey(9), 8, n_hard=1)
+    # dpr + backprop=rep_cache is grad_cache
+    cfg_a = ContrastiveConfig(method="dpr", backprop="rep_cache", accumulation_steps=2)
+    cfg_b = ContrastiveConfig(method="grad_cache", accumulation_steps=2)
+    tx = _tx(cfg_a)
+    state0 = init_state(jax.random.PRNGKey(0), enc, tx, cfg_a)
+    s_a, _ = jax.jit(build_step_program(enc, tx, cfg_a).update)(state0, batch)
+    s_b, _ = jax.jit(build_step_program(enc, tx, cfg_b).update)(state0, batch)
+    _assert_state_close(s_a.params, s_b.params, "override != grad_cache")
+    assert build_step_program(enc, tx, cfg_a).name == "grad_cache"
+
+
+def test_unknown_names_raise():
+    enc = make_mlp_encoder()
+    tx = _tx(ContrastiveConfig())
+    with pytest.raises(ValueError, match="unknown method"):
+        build_step_program(enc, tx, ContrastiveConfig(method="nope"))
+    with pytest.raises(ValueError, match="unknown negatives"):
+        build_step_program(enc, tx, ContrastiveConfig(negatives="nope", backprop="scan"))
+    with pytest.raises(ValueError, match="unknown backprop"):
+        build_step_program(enc, tx, ContrastiveConfig(negatives="in_batch", backprop="nope"))
+    with pytest.raises(ValueError, match="dp_axis"):
+        build_step_program(enc, tx, ContrastiveConfig(method="dpr_xdev"))
+
+
+@pytest.mark.parametrize("method", ["contcache", "prebatch_cache"])
+def test_cache_compositions_reduce_to_dpr_with_empty_banks(method):
+    """rep-cache backprop is exact: with no bank entries both new cache
+    compositions must produce DPR's full-batch gradients."""
+    enc = make_mlp_encoder()
+    batch = make_batch(jax.random.PRNGKey(4), 16, n_hard=1)
+    cfg_dpr = ContrastiveConfig(method="dpr")
+    cfg_new = ContrastiveConfig(method=method, accumulation_steps=4, bank_size=0)
+    tx = _tx(cfg_dpr)
+    s0 = init_state(jax.random.PRNGKey(0), enc, tx, cfg_dpr)
+    s_dpr, m_dpr = jax.jit(build_step_program(enc, tx, cfg_dpr).update)(s0, batch)
+    s0n = init_state(jax.random.PRNGKey(0), enc, _tx(cfg_new), cfg_new)
+    s_new, m_new = jax.jit(build_step_program(enc, _tx(cfg_new), cfg_new).update)(s0n, batch)
+    np.testing.assert_allclose(float(m_dpr.loss), float(m_new.loss), rtol=1e-6)
+    _assert_state_close(s_dpr.params, s_new.params, method, rtol=2e-5, atol=1e-7)
+
+
+def test_contcache_trains_with_bank_extended_negatives():
+    """contcache: full-batch loss (rep-cache) + dual banks. After warm-up the
+    negative count exceeds the in-batch total, banks stay in lockstep, and
+    the loss is finite over a short training run."""
+    enc = make_mlp_encoder()
+    cfg = ContrastiveConfig(method="contcache", accumulation_steps=4, bank_size=32)
+    tx = chain(clip_by_global_norm(2.0), adamw(1e-2))
+    state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+    update = jax.jit(build_step_program(enc, tx, cfg).update)
+    for i in range(4):
+        state, m = update(state, make_batch(jax.random.PRNGKey(20 + i), 16))
+    # one full-batch loss per update: columns = B + N_mem -> 16 + 32 - 1
+    assert float(m.n_negatives) == 16 + 32 - 1
+    assert float(m.bank_fill_q) == 32.0 and float(m.bank_fill_p) == 32.0
+    assert np.isfinite(float(m.loss))
+
+
+def test_prebatch_cache_has_no_query_bank():
+    enc = make_mlp_encoder()
+    cfg = ContrastiveConfig(method="prebatch_cache", accumulation_steps=2, bank_size=16)
+    tx = _tx(cfg)
+    state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+    assert state.bank_q.buf.shape[0] == 0        # passage-only source
+    assert state.bank_p.buf.shape[0] == 16
+    update = jax.jit(build_step_program(enc, tx, cfg).update)
+    for i in range(3):
+        state, m = update(state, make_batch(jax.random.PRNGKey(i), 8))
+    assert float(m.bank_fill_p) == 16.0
+    assert float(m.bank_fill_q) == 0.0
+    assert float(m.n_negatives) == 8 + 16 - 1    # full batch + passage bank
+
+
+def test_make_update_fn_is_thin_registry_over_programs():
+    """The legacy factory and the program builder return the same update."""
+    enc = make_mlp_encoder()
+    cfg = ContrastiveConfig(method="contaccum", accumulation_steps=2, bank_size=8)
+    tx = _tx(cfg)
+    batch = make_batch(jax.random.PRNGKey(3), 8)
+    state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+    s_a, m_a = jax.jit(make_update_fn(enc, tx, cfg))(state, batch)
+    s_b, m_b = jax.jit(build_step_program(enc, tx, cfg).update)(state, batch)
+    np.testing.assert_allclose(float(m_a.loss), float(m_b.loss), rtol=0)
+    _assert_state_close(s_a.params, s_b.params, "factory != program")
+
+
+def test_registry_covers_full_matrix_of_shipped_methods():
+    """Every (source, strategy) pair the paper + the new methods need is an
+    advertised composition; names resolve both ways."""
+    cells = {method_composition(m) for m in available_methods()}
+    for want in [
+        ("in_batch", "direct"), ("in_batch", "scan"), ("in_batch", "rep_cache"),
+        ("dual_bank", "scan"), ("dual_bank", "rep_cache"),
+        ("passage_bank", "scan"), ("passage_bank", "rep_cache"),
+        ("gathered", "direct"),
+    ]:
+        assert want in cells, want
+    assert COMPOSITIONS["contaccum"] == ("dual_bank", "scan")
+
+
+# ------------------------------------------------------------------ drivers
+def _load_example(name):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "examples", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"example_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.parametrize("method", ["contcache", "prebatch_cache"])
+def test_new_methods_train_end_to_end_through_example_driver(method):
+    """examples/train_retriever.py drives the new compositions unchanged."""
+    mod = _load_example("train_retriever")
+    mod.main([
+        "--method", method,
+        "--steps", "3",
+        "--warmup-steps", "2",
+        "--total-batch", "16",
+        "--local-batch", "8",
+        "--bank", "16",
+        "--corpus", "64",
+    ])
+
+
+def test_contrastive_cell_serves_new_compositions():
+    """launch/steps.py builds the contrastive cell for the new methods; the
+    program traces with the cell's sharded abstract inputs."""
+    from jax.sharding import Mesh
+
+    from repro.launch.steps import build_cell
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    for shape in ("contcache_batch", "prebatch_cache_batch"):
+        prog = build_cell("dpr-bert-base", shape, mesh)
+        assert prog.static_info["method"] == shape.replace("_batch", "")
+        out = jax.eval_shape(prog.fn, *prog.args)
+        assert out is not None
