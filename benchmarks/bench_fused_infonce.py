@@ -1,0 +1,105 @@
+"""Dense vs fused InfoNCE loss backend across bank sizes.
+
+Measures what the fused kernel claims: wall time and the XLA temp-buffer
+footprint of one ``value_and_grad`` through ``contrastive_loss`` as the
+column count grows toward pod-scale bank depths (up to 128k columns in the
+full sweep). The dense backend materializes the (M, N) logits block twice
+(forward + backward); the fused backend streams (block_m x block_n) tiles.
+
+On this CPU container the fused kernel runs in interpreter mode, so wall
+time favors dense — the *memory* column is the load-bearing measurement
+here (temp bytes scale O(M*N) dense vs O(M*block_n) fused); compiled-TPU
+timing is what bench sizes the kernel for.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.loss import ExtraColumns, ExtraRows, contrastive_loss
+from repro.core.loss import FusedLossBackend
+
+ROWS = 128          # local batch rows (the paper's N_total)
+DIM = 128           # representation dim (reduced-scale)
+FUSED_BLOCK_N = 1024  # fewer grid steps than 128 at these widths
+
+
+def _inputs(n_bank: int, seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (ROWS, DIM))
+    pp = jax.random.normal(ks[1], (ROWS, DIM))
+    bank_p = jax.random.normal(ks[2], (n_bank, DIM))
+    bank_q = jax.random.normal(ks[3], (n_bank, DIM))
+    # one warm-up stretch of invalid slots so the mask path is exercised
+    valid = jnp.arange(n_bank) < (3 * n_bank // 4)
+    extra_cols = ExtraColumns(reps=bank_p, valid=valid)
+    extra_rows = ExtraRows(
+        reps=bank_q,
+        labels=jnp.arange(n_bank, dtype=jnp.int32),
+        weight=valid.astype(jnp.float32),
+    )
+    return q, pp, extra_cols, extra_rows
+
+
+def _bench(backend, n_bank: int, n_timed: int) -> Tuple[float, float]:
+    """(median seconds, temp bytes) of value_and_grad(loss) wrt (q, p)."""
+    q, pp, extra_cols, extra_rows = _inputs(n_bank)
+
+    def loss(q_, pp_):
+        l, _ = contrastive_loss(
+            q_, pp_, extra_cols=extra_cols, extra_rows=extra_rows,
+            backend=backend,
+        )
+        return l
+
+    fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+    try:
+        mem = fn.lower(q, pp).compile().memory_analysis()
+        temp_bytes = float(getattr(mem, "temp_size_in_bytes", 0) or 0)
+    except Exception:
+        temp_bytes = float("nan")
+    (l, g) = fn(q, pp)
+    jax.block_until_ready(l)
+    ts = []
+    for _ in range(n_timed):
+        t0 = time.perf_counter()
+        out = fn(q, pp)
+        jax.block_until_ready(out[0])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), temp_bytes
+
+
+def run(quick: bool = False) -> List[Tuple[str, float]]:
+    if quick:
+        sizes = [512, 2048]
+    elif jax.default_backend() == "tpu":
+        sizes = [512, 2048, 8192, 32768, 131072]
+    else:
+        # interpret-mode fused at >=32k columns stalls a CPU box for minutes
+        # per rep; the pod-scale points need the compiled kernel
+        sizes = [512, 2048, 8192]
+        print("[fused_infonce] no TPU: capping sweep at 8192 columns "
+              "(32768/131072 need the compiled kernel)")
+    n_timed = 2 if quick else 3
+    rows: List[Tuple[str, float]] = []
+    print("== fused InfoNCE backend sweep (cols = 2*B + bank) ==")
+    print(f"{'bank':>8} {'impl':>6} {'ms/step':>10} {'temp MiB':>10}")
+    for n_bank in sizes:
+        for name, backend in (
+            ("dense", None),
+            ("fused", FusedLossBackend(block_n=FUSED_BLOCK_N)),
+        ):
+            t, b = _bench(backend, n_bank, n_timed)
+            print(f"{n_bank:>8} {name:>6} {t * 1e3:>10.2f} {b / 2**20:>10.2f}")
+            rows.append((f"fused_infonce/bank{n_bank}/{name}_ms", t * 1e3))
+            rows.append((f"fused_infonce/bank{n_bank}/{name}_temp_mb", b / 2**20))
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -15,6 +15,7 @@ from benchmarks import (
     bench_fig3,
     bench_fig4,
     bench_fig5,
+    bench_fused_infonce,
     bench_regimes,
     bench_roofline,
     bench_table1,
@@ -29,6 +30,7 @@ SUITES = {
     "fig5": bench_fig5.run,
     "regimes": bench_regimes.run,
     "roofline": bench_roofline.run,
+    "fused_infonce": bench_fused_infonce.run,
 }
 
 

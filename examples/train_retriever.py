@@ -61,6 +61,10 @@ def main(argv=None):
                          "single-program driver can build "
                          "(core/step_program.py; mesh-requiring methods "
                          "are excluded)")
+    ap.add_argument("--loss-impl", default="dense", choices=["dense", "fused"],
+                    help="loss backend (core/loss.py): 'dense' materializes "
+                         "the logits block, 'fused' streams it through the "
+                         "blocked Pallas kernel (interpret mode on CPU)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--warmup-steps", type=int, default=None,
                     help="in-batch warm-up steps for from-scratch presets "
@@ -81,6 +85,7 @@ def main(argv=None):
         method=args.method,
         accumulation_steps=k if backprop != "direct" else 1,
         bank_size=args.bank if method_uses_banks(args.method) else 0,
+        loss_impl=args.loss_impl,
         temperature=1.0, grad_clip_norm=2.0,
     )
     enc = make_bert_dual_encoder(bert)
@@ -129,7 +134,8 @@ def main(argv=None):
         int(x.size) for x in jax.tree_util.tree_leaves(state.params)
     )
     print(f"preset={args.preset} method={program.name} "
-          f"({program.source.name} x {program.strategy.name}): "
+          f"({program.source.name} x {program.strategy.name}, "
+          f"loss={cfg.loss_impl}): "
           f"{n_params/1e6:.1f}M params (both towers), "
           f"K={cfg.accumulation_steps}, N_mem={cfg.bank_size}")
 

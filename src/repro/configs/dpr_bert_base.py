@@ -22,6 +22,21 @@ DPR_SHAPES = {
             "n_hard": 1,
         },
     ),
+    # the paper's geometry on the fused Pallas loss backend: the extended
+    # (B + N_mem) logits block streams through VMEM instead of HBM
+    "paper_batch_fused": ShapeCell(
+        "paper_batch_fused",
+        "contrastive",
+        {
+            "global_batch": 128,
+            "accum_steps": 1,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "loss_impl": "fused",
+        },
+    ),
     # pod-scale: 16k pairs/step with 32k-deep dual banks
     "contrastive_16k": ShapeCell(
         "contrastive_16k",

@@ -10,6 +10,8 @@ from repro.core.memory_bank import (
 from repro.core.loss import (
     contrastive_loss, contrastive_step_loss, LossAux,
     ExtraColumns, ExtraRows, bank_extra_columns, bank_extra_rows,
+    LossBackend, DenseLossBackend, FusedLossBackend, LOSS_BACKENDS,
+    resolve_loss_backend,
 )
 from repro.core.dist import DistCtx
 from repro.core.step_program import (
@@ -50,6 +52,8 @@ __all__ = [
     "aligned_valid", "capacity", "columns_view",
     "contrastive_loss", "contrastive_step_loss", "LossAux",
     "ExtraColumns", "ExtraRows", "bank_extra_columns", "bank_extra_rows",
+    "LossBackend", "DenseLossBackend", "FusedLossBackend", "LOSS_BACKENDS",
+    "resolve_loss_backend",
     "DistCtx",
     "ContrastiveConfig", "ContrastiveState", "DualEncoder", "RetrievalBatch",
     "StepMetrics", "chunk_tree", "flatten_hard",

@@ -1,11 +1,29 @@
 """The canonical contrastive step loss shared by every update method.
 
-Single implementation covering:
+Single loss assembly covering:
   - plain in-batch negatives (DPR / GradAccum / GradCache): no extras;
   - ContAccum's extended similarity matrix (paper Eq. 5-7): dual banks;
   - pre-batch negatives ablation: passage-only bank;
   - cross-device negatives: columns are all-gathered across the DP axes and
     each device reduces over its own rows (see core/dist.py).
+
+The row-level softmax statistics are computed by a pluggable ``LossBackend``:
+
+  * ``dense`` (default) — materializes the (M, N) logits block with one
+    einsum; exact, simple, and fine while M*N fits comfortably in HBM.
+  * ``fused`` — the blocked online-softmax Pallas kernel
+    (kernels/fused_infonce): streams (block_m x block_n) tiles through VMEM,
+    so the extended similarity matrix of ContAccum's dual banks (up to 128k
+    columns at pod scale) never touches HBM, in either direction of the
+    custom VJP. Gradient-exact vs ``dense`` to fp32 tolerance
+    (tests/test_fused_infonce.py); runs under ``interpret=True`` on CPU so
+    the whole method matrix is testable without a TPU.
+
+Select with ``ContrastiveConfig.loss_impl`` (threaded through
+``build_step_program`` and every NegativeSource) or pass ``backend=`` here
+directly. Both backends honor the same contract: per-row ``lse - pos`` with
+invalid columns masked exactly, arbitrary per-row weighting (ExtraRows), and
+argmax accuracy.
 
 Column assembly is *source-driven*: a NegativeSource (core/step_program.py)
 describes where its negatives come from with two declarative blocks —
@@ -30,7 +48,8 @@ reproduces the global row sum exactly once.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+from typing import NamedTuple, Optional, Protocol, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +90,106 @@ class ExtraRows(NamedTuple):
     weight: jnp.ndarray  # (R,) float32
 
 
+# --------------------------------------------------------------------------
+# Loss backends: how the (rows x columns) softmax statistics are computed
+# --------------------------------------------------------------------------
+class LossBackend(Protocol):
+    """Computes the per-row softmax statistics of one row block against the
+    assembled column set. Implementations must agree to fp32 tolerance."""
+
+    name: str
+
+    def row_stats(
+        self,
+        q_rows: jnp.ndarray,     # (M, d) query rows
+        p_all: jnp.ndarray,      # (N, d) assembled columns
+        labels: jnp.ndarray,     # (M,) int32 — positive column per row
+        col_mask: jnp.ndarray,   # (N,) bool — invalid columns masked exactly
+        *,
+        temperature: float,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (per_row_loss, correct): ``lse - pos`` per row
+        (differentiable w.r.t. q_rows / p_all) and the stop-gradient
+        argmax-accuracy indicator (backends may differ on exact logit
+        ties — a measure-zero, metrics-only discrepancy)."""
+        ...
+
+
+class DenseLossBackend:
+    """One einsum materializes the (M, N) logits block — the reference path."""
+
+    name = "dense"
+
+    def row_stats(self, q_rows, p_all, labels, col_mask, *, temperature):
+        logits = jnp.einsum(
+            "md,nd->mn", q_rows, p_all, preferred_element_type=jnp.float32
+        ) / jnp.asarray(temperature, jnp.float32)
+        logits = jnp.where(col_mask[None, :], logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return lse - pos, correct
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedLossBackend:
+    """Blocked online-softmax Pallas kernel (kernels/fused_infonce): the
+    logits block lives tile-by-tile in VMEM, never in HBM. ``interpret=None``
+    auto-selects: compiled on TPU, interpreter elsewhere (CPU-testable)."""
+
+    block_m: int = 128
+    block_n: int = 128
+    interpret: Optional[bool] = None
+
+    name = "fused"
+
+    def row_stats(self, q_rows, p_all, labels, col_mask, *, temperature):
+        from repro.kernels.fused_infonce.ops import fused_infonce_stats
+
+        interpret = (
+            jax.default_backend() != "tpu"
+            if self.interpret is None
+            else self.interpret
+        )
+        lse, pos, amax = fused_infonce_stats(
+            q_rows,
+            p_all.astype(q_rows.dtype),
+            labels.astype(jnp.int32),
+            col_mask,
+            1.0 / float(temperature),
+            self.block_m,
+            self.block_n,
+            interpret,
+        )
+        # amax is metrics-only (its VJP cotangent is discarded by the kernel).
+        # Tie semantics differ from dense on exact fp32 logit ties: here a
+        # tied positive counts as correct, while dense argmax breaks ties by
+        # column index — losses/gradients are unaffected.
+        correct = jax.lax.stop_gradient((pos >= amax).astype(jnp.float32))
+        return lse - pos, correct
+
+
+LOSS_BACKENDS = {"dense": DenseLossBackend, "fused": FusedLossBackend}
+
+_DENSE_BACKEND = DenseLossBackend()
+
+
+def resolve_loss_backend(
+    spec: Union[None, str, LossBackend] = None,
+) -> LossBackend:
+    """None -> dense; a registered name -> fresh instance; an instance -> as
+    is. Raises ValueError for unknown names (surfaced at program build)."""
+    if spec is None:
+        return _DENSE_BACKEND
+    if isinstance(spec, str):
+        if spec not in LOSS_BACKENDS:
+            raise ValueError(
+                f"unknown loss_impl {spec!r}; one of {sorted(LOSS_BACKENDS)}"
+            )
+        return LOSS_BACKENDS[spec]()
+    return spec
+
+
 def contrastive_loss(
     q_local: jnp.ndarray,
     p_pos_local: jnp.ndarray,
@@ -80,12 +199,16 @@ def contrastive_loss(
     extra_rows: Optional[ExtraRows] = None,
     temperature: float = 1.0,
     ctx: Optional[DistCtx] = None,
+    backend: Union[None, str, LossBackend] = None,
 ) -> tuple[jnp.ndarray, LossAux]:
     """Returns (loss_dev, aux). ``loss_dev`` is this device's share of the
     global loss: psum(loss_dev) == global loss; in single-device mode
     loss_dev == global loss. Differentiate loss_dev, then psum the grads.
+    ``backend`` selects how the softmax statistics are computed (None ->
+    dense einsum; 'fused' -> the blocked Pallas kernel; or an instance).
     """
     ctx = ctx or DistCtx()
+    be = resolve_loss_backend(backend)
     b_local = q_local.shape[0]
 
     # --- columns (gathered across DP axes) ---
@@ -110,14 +233,7 @@ def contrastive_loss(
     labels_local = row_offset + jnp.arange(b_local, dtype=jnp.int32)
 
     def row_stats(q_rows, labels):
-        logits = jnp.einsum(
-            "md,nd->mn", q_rows, p_all, preferred_element_type=jnp.float32
-        ) / jnp.asarray(temperature, jnp.float32)
-        logits = jnp.where(col_mask[None, :], logits, NEG_INF)
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
-        return lse - pos, correct
+        return be.row_stats(q_rows, p_all, labels, col_mask, temperature=temperature)
 
     per_row_local, correct_local = row_stats(q_local, labels_local)
     loss_sum = per_row_local.sum()
@@ -187,6 +303,7 @@ def contrastive_step_loss(
     *,
     temperature: float = 1.0,
     ctx: Optional[DistCtx] = None,
+    backend: Union[None, str, LossBackend] = None,
 ) -> tuple[jnp.ndarray, LossAux]:
     """Legacy bank-taking entry point: dual banks -> extras -> loss."""
     return contrastive_loss(
@@ -197,4 +314,5 @@ def contrastive_step_loss(
         extra_rows=bank_extra_rows(bank_q, bank_p),
         temperature=temperature,
         ctx=ctx,
+        backend=backend,
     )

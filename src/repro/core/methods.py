@@ -23,6 +23,10 @@ Every builder returns ``update(state, batch) -> (state, StepMetrics)``; all
 are pure and jit/shard_map-compatible. Prefer ``build_step_program`` for the
 full program handle (source/strategy introspection); ``make_update_fn`` and
 the per-method ``make_*_update`` builders remain as the legacy surface.
+
+Every method also honors ``cfg.loss_impl`` ('dense' | 'fused') — the loss
+backend switch (core/loss.py) between the einsum logits block and the
+blocked online-softmax Pallas kernel.
 """
 
 from __future__ import annotations

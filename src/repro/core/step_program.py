@@ -35,6 +35,12 @@ compositions (COMPOSITIONS):
 
 The four legacy compositions are gradient-exact against the original
 monolithic implementations (tests/test_step_program.py).
+
+Orthogonal to both axes, ``cfg.loss_impl`` picks the **LossBackend**
+(core/loss.py): 'dense' (einsum logits block, default) or 'fused' (the
+blocked online-softmax Pallas kernel) — every source x strategy composition
+runs on either backend, gradient-exact to fp32 tolerance
+(tests/test_fused_infonce.py).
 """
 
 from __future__ import annotations
@@ -49,9 +55,11 @@ from repro.common.treemath import tree_add, tree_scale, tree_zeros_like, tree_gl
 from repro.core.dist import DistCtx
 from repro.core.loss import (
     LossAux,
+    LossBackend,
     bank_extra_columns,
     bank_extra_rows,
     contrastive_loss,
+    resolve_loss_backend,
 )
 from repro.core.memory_bank import BankState, clear, init_bank, push, push_pair
 from repro.core.types import (
@@ -103,8 +111,10 @@ class NegativeSource(Protocol):
         *,
         temperature: float,
         ctx: DistCtx,
+        backend: Optional[LossBackend] = None,
     ) -> Tuple[jnp.ndarray, LossAux]:
-        """One loss evaluation with this source's columns/rows/masks."""
+        """One loss evaluation with this source's columns/rows/masks,
+        computed by ``backend`` (None -> dense)."""
         ...
 
     def push(self, carry: Carry, aux: LossAux, step: jnp.ndarray) -> Carry:
@@ -131,8 +141,10 @@ class InBatchNegatives:
     def begin(self, state, cfg):
         return (state.bank_q, state.bank_p)
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx):
-        return contrastive_loss(q, pp, ph, temperature=temperature, ctx=ctx)
+    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
+        return contrastive_loss(
+            q, pp, ph, temperature=temperature, ctx=ctx, backend=backend
+        )
 
     def push(self, carry, aux, step):
         return carry
@@ -177,7 +189,7 @@ class DualBankNegatives:
             return (clear(state.bank_q), clear(state.bank_p))
         return (state.bank_q, state.bank_p)
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx):
+    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
         bank_q, bank_p = carry
         return contrastive_loss(
             q,
@@ -187,6 +199,7 @@ class DualBankNegatives:
             extra_rows=bank_extra_rows(bank_q, bank_p),
             temperature=temperature,
             ctx=ctx,
+            backend=backend,
         )
 
     def push(self, carry, aux, step):
@@ -207,7 +220,7 @@ class PassageBankNegatives(DualBankNegatives):
         _, np_ = cfg.resolved_bank_sizes()
         return 0, np_
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx):
+    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
         _, bank_p = carry
         return contrastive_loss(
             q,
@@ -216,6 +229,7 @@ class PassageBankNegatives(DualBankNegatives):
             extra_cols=bank_extra_columns(bank_p),
             temperature=temperature,
             ctx=ctx,
+            backend=backend,
         )
 
     def push(self, carry, aux, step):
@@ -288,9 +302,14 @@ class DirectBackprop:
         pass
 
     def compute(self, encoder, params, batch, source, carry, step, cfg, ctx):
+        backend = resolve_loss_backend(cfg.loss_impl)
+
         def loss_fn(p):
             q, pp, ph = _encode_chunk(encoder, p, batch)
-            return source.loss(q, pp, ph, carry, temperature=cfg.temperature, ctx=ctx)
+            return source.loss(
+                q, pp, ph, carry, temperature=cfg.temperature, ctx=ctx,
+                backend=backend,
+            )
 
         (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         grads = ctx.psum_tree(grads)
@@ -312,6 +331,7 @@ class ScanAccumulate:
     def compute(self, encoder, params, batch, source, carry, step, cfg, ctx):
         k = cfg.accumulation_steps
         chunks = _chunk_batch(batch, k)
+        backend = resolve_loss_backend(cfg.loss_impl)
 
         def body(c, chunk):
             grads_acc, carry_ = c
@@ -319,7 +339,8 @@ class ScanAccumulate:
             def loss_fn(p):
                 q, pp, ph = _encode_chunk(encoder, p, chunk)
                 return source.loss(
-                    q, pp, ph, carry_, temperature=cfg.temperature, ctx=ctx
+                    q, pp, ph, carry_, temperature=cfg.temperature, ctx=ctx,
+                    backend=backend,
                 )
 
             (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
@@ -352,6 +373,7 @@ class RepCacheVJP:
         k = cfg.accumulation_steps
         chunks = _chunk_batch(batch, k)
         has_hard = batch.passage_hard is not None
+        backend = resolve_loss_backend(cfg.loss_impl)
 
         # Stage 1: representation-only forward, chunk by chunk, no stored
         # activations for the loss graph (stop_gradient == GradCache's
@@ -377,6 +399,7 @@ class RepCacheVJP:
                 carry,
                 temperature=cfg.temperature,
                 ctx=ctx,
+                backend=backend,
             )
 
         (_, aux), rep_grads = jax.value_and_grad(rep_loss, argnums=(0, 1, 2), has_aux=True)(
@@ -530,10 +553,13 @@ def build_step_program(
     """Compose cfg's negative source and backprop strategy into one update
     program. The program owns chunking, loss assembly, bank pushes, the
     optimizer application and metric assembly; it is pure and serves
-    single-device, shard_map/GSPMD and dry-run paths unchanged."""
+    single-device, shard_map/GSPMD and dry-run paths unchanged.
+    ``cfg.loss_impl`` selects the loss backend (dense einsum vs the fused
+    Pallas kernel) orthogonally to the composition."""
     source, strategy = resolve_composition(cfg)
     source.validate(cfg)
     strategy.validate(cfg)
+    resolve_loss_backend(cfg.loss_impl)  # fail fast on unknown loss_impl
     ctx = DistCtx(cfg.dp_axis)
 
     def update(state: ContrastiveState, batch: RetrievalBatch):

@@ -56,6 +56,11 @@ class ContrastiveConfig:
         pre-batch-negatives ablation).
     reset_banks_each_update: 'w/o past encoder' ablation (Table 2).
     use_query_bank: False reproduces pre-batch negatives (w/o M_q, Table 2).
+    loss_impl: 'dense' | 'fused' — how the loss's softmax statistics are
+        computed (core/loss.py LossBackend). 'dense' (default) materializes
+        the (M, N) logits block; 'fused' streams it through the blocked
+        online-softmax Pallas kernel (gradient-exact, never materialized).
+        Composes with every negatives/backprop setting.
     """
 
     method: str = "contaccum"
@@ -70,6 +75,7 @@ class ContrastiveConfig:
     reset_banks_each_update: bool = False
     grad_clip_norm: float = 2.0
     bank_dtype: Any = jnp.float32
+    loss_impl: str = "dense"
     # Cross-device negatives: name(s) of mesh axes to all-gather representations
     # over; None means single-device semantics.
     dp_axis: Optional[Any] = None

@@ -7,6 +7,18 @@ an online-softmax accumulator (running max / sum-exp scratch), extracting the
 positive logit when the row's label falls inside the current column block.
 The backward kernels recompute tiles and emit dQ / dP with the same blocking.
 
+Bank-layout support (what core/loss.py's extended matrix needs):
+  * ``col_valid`` — per-column validity; invalid columns (bank warm-up slots,
+    padding) are masked to NEG_INF inside every tile, so they contribute
+    neither to the softmax nor to the gradients (the backward coefficient is
+    zeroed for masked columns, matching the dense ``jnp.where`` whose
+    gradient w.r.t. a masked logit is exactly zero).
+  * ragged M/N — inputs are padded internally to the block grid (padded rows
+    are dropped from the outputs, padded columns are masked invalid), so
+    batch/bank sizes need not be multiples of the 128-lane MXU tile.
+  * ``amax`` output — the per-row running maximum, so callers can derive
+    argmax-accuracy (``pos >= amax``) without a second pass.
+
 Grid layout (fwd, dq): (M/bm, N/bn), N innermost so per-row scratch carries
 across column blocks; output rows are revisited — final values written on the
 last column step. dp uses the transposed grid (N/bn, M/bm).
@@ -19,6 +31,7 @@ rep_dim <= 8192 fits VMEM comfortably (128 x 8192 x 4B = 4 MiB per operand).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +41,8 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fwd_kernel(labels_ref, q_ref, p_ref, lse_ref, pos_ref, m_scr, l_scr, *, inv_tau, bm, bn, n_blocks):
+def _fwd_kernel(labels_ref, valid_ref, q_ref, p_ref, lse_ref, pos_ref, amax_ref,
+                m_scr, l_scr, *, inv_tau, bm, bn, n_blocks):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -44,6 +58,9 @@ def _fwd_kernel(labels_ref, q_ref, p_ref, lse_ref, pos_ref, m_scr, l_scr, *, inv
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     ) * inv_tau  # (bm, bn)
+    # invalid columns never enter the softmax (bank warm-up slots, padding)
+    vld = valid_ref[pl.ds(j * bn, bn)] != 0
+    s = jnp.where(vld[None, :], s, NEG_INF)
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -66,6 +83,42 @@ def _fwd_kernel(labels_ref, q_ref, p_ref, lse_ref, pos_ref, m_scr, l_scr, *, inv
     @pl.when(j == n_blocks - 1)
     def _final():
         lse_ref[...] = m_scr[...] + jnp.log(l_scr[...])
+        amax_ref[...] = m_scr[...]
+
+
+def _pad_axis0(x: jnp.ndarray, to: int, fill=0):
+    n = x.shape[0]
+    if n == to:
+        return x
+    pad = [(0, to - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _blocking(m: int, n: int, block_m: int, block_n: int):
+    """Effective block sizes + padded sizes: blocks are clipped to the array,
+    then the array is padded up to a whole number of blocks (ragged shapes)."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    m_pad = -(-m // bm) * bm
+    n_pad = -(-n // bn) * bn
+    return bm, bn, m_pad, n_pad
+
+
+def _prep_operands(q, p, labels, col_valid, m_pad, n_pad):
+    """Pad to the block grid: padded rows are zeros (outputs sliced off),
+    padded columns are marked invalid (masked to NEG_INF in-kernel)."""
+    n = p.shape[0]
+    valid = (
+        jnp.ones((n,), jnp.int32)
+        if col_valid is None
+        else col_valid.astype(jnp.int32)
+    )
+    return (
+        _pad_axis0(q, m_pad),
+        _pad_axis0(p, n_pad),
+        _pad_axis0(labels.astype(jnp.int32), m_pad),
+        _pad_axis0(valid, n_pad),
+    )
 
 
 def fused_infonce_fwd(
@@ -73,60 +126,70 @@ def fused_infonce_fwd(
     p: jnp.ndarray,
     labels: jnp.ndarray,
     *,
+    col_valid: Optional[jnp.ndarray] = None,
     inv_tau: float = 1.0,
     block_m: int = 128,
     block_n: int = 128,
     interpret: bool = False,
 ):
-    """Returns (lse, pos) per row; loss = mean(lse - pos)."""
+    """Returns (lse, pos, amax) per row; loss = mean(lse - pos).
+
+    ``col_valid`` (N,) masks columns exactly (None = all valid); arbitrary
+    M/N are handled by internal padding.
+    """
     m, d = q.shape
     n, _ = p.shape
-    block_m = min(block_m, m)
-    block_n = min(block_n, n)
-    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
-    grid = (m // block_m, n // block_n)
+    bm, bn, m_pad, n_pad = _blocking(m, n, block_m, block_n)
+    q, p, labels, valid = _prep_operands(q, p, labels, col_valid, m_pad, n_pad)
+    grid = (m_pad // bm, n_pad // bn)
 
     kernel = functools.partial(
-        _fwd_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n, n_blocks=grid[1]
+        _fwd_kernel, inv_tau=inv_tau, bm=bm, bn=bn, n_blocks=grid[1]
     )
-    lse, pos = pl.pallas_call(
+    lse, pos, amax = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
-                pl.BlockSpec((block_n, d), lambda i, j, labels: (j, 0)),
+                pl.BlockSpec((bm, d), lambda i, j, labels, valid: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j, labels, valid: (j, 0)),
             ],
             out_specs=[
-                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
-                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
             ],
             scratch_shapes=[
-                pltpu.VMEM((block_m,), jnp.float32),
-                pltpu.VMEM((block_m,), jnp.float32),
+                pltpu.VMEM((bm,), jnp.float32),
+                pltpu.VMEM((bm,), jnp.float32),
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((m,), jnp.float32),
-            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
         ],
         interpret=interpret,
-    )(labels.astype(jnp.int32), q, p)
-    return lse, pos
+    )(labels, valid, q, p)
+    return lse[:m], pos[:m], amax[:m]
 
 
-def _coeff(s, lse_rows, labels, col0, bn, g_lse, g_pos):
-    """Per-tile cotangent of the logits: prob * g_lse + onehot * g_pos."""
+def _coeff(s, vld, lse_rows, labels, col0, bn, g_lse, g_pos):
+    """Per-tile cotangent of the logits: prob * g_lse + onehot * g_pos.
+    Zero for invalid columns — the dense path's ``where`` mask has exactly
+    zero gradient w.r.t. a masked logit."""
     prob = jnp.exp(s - lse_rows[:, None])
     local = labels - col0
     onehot = (
         jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == local[:, None]
     ).astype(jnp.float32)
-    return prob * g_lse[:, None] + onehot * g_pos[:, None]
+    coeff = prob * g_lse[:, None] + onehot * g_pos[:, None]
+    return jnp.where(vld[None, :], coeff, 0.0)
 
 
-def _dq_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dq_ref, *, inv_tau, bm, bn):
+def _dq_kernel(labels_ref, valid_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref,
+               dq_ref, *, inv_tau, bm, bn):
     """dQ = sum over column blocks of coeff @ P * inv_tau."""
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -139,15 +202,18 @@ def _dq_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dq_ref, *,
         q_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     ) * inv_tau
-    coeff = _coeff(s, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn, bn,
-                   glse_ref[...], gpos_ref[...]) * inv_tau
+    vld = valid_ref[pl.ds(j * bn, bn)] != 0
+    s = jnp.where(vld[None, :], s, NEG_INF)
+    coeff = _coeff(s, vld, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn,
+                   bn, glse_ref[...], gpos_ref[...]) * inv_tau
     dq_ref[...] += jax.lax.dot_general(
         coeff.astype(p_ref.dtype), p_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).astype(dq_ref.dtype)
 
 
-def _dp_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dp_ref, *, inv_tau, bm, bn):
+def _dp_kernel(labels_ref, valid_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref,
+               dp_ref, *, inv_tau, bm, bn):
     """dP = sum over row blocks of coeff^T @ Q * inv_tau.
     Grid: (N/bn, M/bm) — column blocks outer, row blocks inner (accumulated)."""
     i = pl.program_id(1)
@@ -161,8 +227,10 @@ def _dp_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dp_ref, *,
         q_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     ) * inv_tau  # (bm, bn)
-    coeff = _coeff(s, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn, bn,
-                   glse_ref[...], gpos_ref[...]) * inv_tau
+    vld = valid_ref[pl.ds(j * bn, bn)] != 0
+    s = jnp.where(vld[None, :], s, NEG_INF)
+    coeff = _coeff(s, vld, lse_ref[...], labels_ref[pl.ds(i * bm, bm)], j * bn,
+                   bn, glse_ref[...], gpos_ref[...]) * inv_tau
     dp_ref[...] += jax.lax.dot_general(
         coeff.astype(q_ref.dtype), q_ref[...], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -172,6 +240,7 @@ def _dp_kernel(labels_ref, q_ref, p_ref, lse_ref, glse_ref, gpos_ref, dp_ref, *,
 def fused_infonce_bwd(
     q, p, labels, lse, g_lse, g_pos,
     *,
+    col_valid: Optional[jnp.ndarray] = None,
     inv_tau: float = 1.0,
     block_m: int = 128,
     block_n: int = 128,
@@ -180,45 +249,50 @@ def fused_infonce_bwd(
     """Exact VJP given the per-row cotangents of (lse, pos)."""
     m, d = q.shape
     n, _ = p.shape
-    block_m = min(block_m, m)
-    block_n = min(block_n, n)
-    grid_q = (m // block_m, n // block_n)
+    bm, bn, m_pad, n_pad = _blocking(m, n, block_m, block_n)
+    q, p, labels, valid = _prep_operands(q, p, labels, col_valid, m_pad, n_pad)
+    # padded rows carry zero cotangents and lse=0, so their uniform
+    # exp(0 - 0) probabilities never reach dQ/dP
+    lse = _pad_axis0(lse, m_pad)
+    g_lse = _pad_axis0(g_lse, m_pad)
+    g_pos = _pad_axis0(g_pos, m_pad)
+    grid_q = (m_pad // bm, n_pad // bn)
 
     dq = pl.pallas_call(
-        functools.partial(_dq_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n),
+        functools.partial(_dq_kernel, inv_tau=inv_tau, bm=bm, bn=bn),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid_q,
             in_specs=[
-                pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
-                pl.BlockSpec((block_n, d), lambda i, j, labels: (j, 0)),
-                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
-                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
-                pl.BlockSpec((block_m,), lambda i, j, labels: (i,)),
+                pl.BlockSpec((bm, d), lambda i, j, labels, valid: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j, labels, valid: (j, 0)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda i, j, labels, valid: (i,)),
             ],
-            out_specs=pl.BlockSpec((block_m, d), lambda i, j, labels: (i, 0)),
+            out_specs=pl.BlockSpec((bm, d), lambda i, j, labels, valid: (i, 0)),
         ),
-        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), jnp.float32),
         interpret=interpret,
-    )(labels.astype(jnp.int32), q, p, lse, g_lse, g_pos)
+    )(labels, valid, q, p, lse, g_lse, g_pos)
 
-    grid_p = (n // block_n, m // block_m)
+    grid_p = (n_pad // bn, m_pad // bm)
     dp = pl.pallas_call(
-        functools.partial(_dp_kernel, inv_tau=inv_tau, bm=block_m, bn=block_n),
+        functools.partial(_dp_kernel, inv_tau=inv_tau, bm=bm, bn=bn),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid_p,
             in_specs=[
-                pl.BlockSpec((block_m, d), lambda j, i, labels: (i, 0)),
-                pl.BlockSpec((block_n, d), lambda j, i, labels: (j, 0)),
-                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
-                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
-                pl.BlockSpec((block_m,), lambda j, i, labels: (i,)),
+                pl.BlockSpec((bm, d), lambda j, i, labels, valid: (i, 0)),
+                pl.BlockSpec((bn, d), lambda j, i, labels, valid: (j, 0)),
+                pl.BlockSpec((bm,), lambda j, i, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda j, i, labels, valid: (i,)),
+                pl.BlockSpec((bm,), lambda j, i, labels, valid: (i,)),
             ],
-            out_specs=pl.BlockSpec((block_n, d), lambda j, i, labels: (j, 0)),
+            out_specs=pl.BlockSpec((bn, d), lambda j, i, labels, valid: (j, 0)),
         ),
-        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
         interpret=interpret,
-    )(labels.astype(jnp.int32), q, p, lse, g_lse, g_pos)
+    )(labels, valid, q, p, lse, g_lse, g_pos)
 
-    return dq.astype(q.dtype), dp.astype(p.dtype)
+    return dq[:m].astype(q.dtype), dp[:n].astype(p.dtype)

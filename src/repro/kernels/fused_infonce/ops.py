@@ -1,7 +1,13 @@
 """Jitted public API for the fused InfoNCE kernel with a custom VJP.
 
-``fused_infonce_loss(q, p, labels)`` = mean_i (lse_i - pos_i), computed
-without materializing the (M, N) similarity matrix in either direction.
+``fused_infonce_stats(q, p, labels, col_valid)`` returns per-row
+``(lse, pos, amax)`` — everything the loss backend in core/loss.py needs:
+``loss = mean(lse - pos)`` (or any per-row weighting, the VJP takes arbitrary
+row cotangents) and ``pos >= amax`` recovers argmax-accuracy. None of it
+materializes the (M, N) similarity matrix in either direction.
+
+``amax`` is a metrics-only output: its cotangent is discarded by the VJP, so
+callers must wrap any use of it in ``jax.lax.stop_gradient``.
 """
 
 from __future__ import annotations
@@ -18,34 +24,44 @@ from repro.kernels.fused_infonce.fused_infonce import (
 )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def fused_infonce_rows(q, p, labels, inv_tau=1.0, block_m=128, block_n=128, interpret=True):
-    """(lse, pos) per row. Differentiable w.r.t. q and p."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def fused_infonce_stats(q, p, labels, col_valid, inv_tau=1.0, block_m=128,
+                        block_n=128, interpret=True):
+    """(lse, pos, amax) per row. Differentiable w.r.t. q and p; ``col_valid``
+    ((N,) bool or None) masks columns out of the softmax and the gradients."""
     return fused_infonce_fwd(
-        q, p, labels, inv_tau=inv_tau, block_m=block_m, block_n=block_n,
-        interpret=interpret,
+        q, p, labels, col_valid=col_valid, inv_tau=inv_tau,
+        block_m=block_m, block_n=block_n, interpret=interpret,
     )
 
 
-def _rows_fwd(q, p, labels, inv_tau, block_m, block_n, interpret):
-    lse, pos = fused_infonce_fwd(
-        q, p, labels, inv_tau=inv_tau, block_m=block_m, block_n=block_n,
-        interpret=interpret,
+def _stats_fwd(q, p, labels, col_valid, inv_tau, block_m, block_n, interpret):
+    lse, pos, amax = fused_infonce_stats(
+        q, p, labels, col_valid, inv_tau, block_m, block_n, interpret
     )
-    return (lse, pos), (q, p, labels, lse)
+    return (lse, pos, amax), (q, p, labels, col_valid, lse)
 
 
-def _rows_bwd(inv_tau, block_m, block_n, interpret, res, cotangents):
-    q, p, labels, lse = res
-    g_lse, g_pos = cotangents
+def _stats_bwd(inv_tau, block_m, block_n, interpret, res, cotangents):
+    q, p, labels, col_valid, lse = res
+    g_lse, g_pos, _ = cotangents  # amax is metrics-only: cotangent discarded
     dq, dp = fused_infonce_bwd(
-        q, p, labels, lse, g_lse, g_pos,
+        q, p, labels, lse, g_lse, g_pos, col_valid=col_valid,
         inv_tau=inv_tau, block_m=block_m, block_n=block_n, interpret=interpret,
     )
-    return dq, dp, None
+    return dq, dp, None, None
 
 
-fused_infonce_rows.defvjp(_rows_fwd, _rows_bwd)
+fused_infonce_stats.defvjp(_stats_fwd, _stats_bwd)
+
+
+def fused_infonce_rows(q, p, labels, inv_tau=1.0, block_m=128, block_n=128,
+                       interpret=True):
+    """(lse, pos) per row, all columns valid. Differentiable w.r.t. q and p."""
+    lse, pos, _ = fused_infonce_stats(
+        q, p, labels, None, inv_tau, block_m, block_n, interpret
+    )
+    return lse, pos
 
 
 def fused_infonce_loss(
@@ -53,6 +69,7 @@ def fused_infonce_loss(
     p: jnp.ndarray,
     labels: Optional[jnp.ndarray] = None,
     *,
+    col_valid: Optional[jnp.ndarray] = None,
     temperature: float = 1.0,
     block_m: int = 128,
     block_n: int = 128,
@@ -62,7 +79,7 @@ def fused_infonce_loss(
     (this container); on TPU pass interpret=False."""
     if labels is None:
         labels = jnp.arange(q.shape[0], dtype=jnp.int32)
-    lse, pos = fused_infonce_rows(
-        q, p, labels, 1.0 / temperature, block_m, block_n, interpret
+    lse, pos, _ = fused_infonce_stats(
+        q, p, labels, col_valid, 1.0 / temperature, block_m, block_n, interpret
     )
     return jnp.mean(lse - pos)

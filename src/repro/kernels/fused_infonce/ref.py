@@ -6,8 +6,12 @@ full (M, N) similarity matrix — exactly what the kernel avoids.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30
 
 
 def infonce_rows_ref(q: jnp.ndarray, p: jnp.ndarray, labels: jnp.ndarray, *, inv_tau: float = 1.0):
@@ -17,6 +21,26 @@ def infonce_rows_ref(q: jnp.ndarray, p: jnp.ndarray, labels: jnp.ndarray, *, inv
     lse = jax.nn.logsumexp(logits, axis=-1)
     pos = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
     return lse, pos
+
+
+def infonce_stats_ref(
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    labels: jnp.ndarray,
+    col_valid: Optional[jnp.ndarray] = None,
+    *,
+    inv_tau: float = 1.0,
+):
+    """Dense oracle for fused_infonce_stats: (lse, pos, amax) with invalid
+    columns masked to NEG_INF (gradient exactly zero through the mask)."""
+    logits = (
+        jnp.einsum("md,nd->mn", q, p, preferred_element_type=jnp.float32) * inv_tau
+    )
+    if col_valid is not None:
+        logits = jnp.where(col_valid[None, :], logits, NEG_INF)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse, pos, jnp.max(logits, axis=-1)
 
 
 def infonce_loss_ref(q, p, labels, *, inv_tau: float = 1.0):

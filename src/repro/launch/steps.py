@@ -536,6 +536,9 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
         backprop=p.get("backprop"),
         accumulation_steps=p["accum_steps"],
         bank_size=p["bank_size"],
+        # 'fused' streams the extended logits block through the Pallas
+        # online-softmax kernel (compiled on TPU, interpreter elsewhere)
+        loss_impl=p.get("loss_impl", "dense"),
         temperature=1.0,
         # dp_axis=None: single-program semantics; GSPMD derives the
         # cross-device negative all-gathers from the batch sharding.
@@ -581,6 +584,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "method": program.name,
             "negatives": program.source.name,
             "backprop": program.strategy.name,
+            "loss_impl": ccfg.loss_impl,
         },
     )
 

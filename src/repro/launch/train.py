@@ -53,6 +53,9 @@ def main(argv=None):
     # only offer methods it can actually run
     methods = [m for m in available_methods() if not method_needs_mesh(m)]
     ap.add_argument("--method", default="contaccum", choices=methods)
+    ap.add_argument("--loss-impl", default="dense", choices=["dense", "fused"],
+                    help="loss backend (core/loss.py): dense einsum or the "
+                         "blocked Pallas online-softmax kernel")
     ap.add_argument("--total-batch", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--bank", type=int, default=256)
@@ -70,6 +73,7 @@ def main(argv=None):
         method=args.method,
         accumulation_steps=k if backprop != "direct" else 1,
         bank_size=args.bank if method_uses_banks(args.method) else 0,
+        loss_impl=args.loss_impl,
         temperature=1.0,
         grad_clip_norm=2.0,
     )

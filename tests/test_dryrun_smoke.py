@@ -47,7 +47,7 @@ SCRIPT = textwrap.dedent(
     all_cells = list_cells()
     archs = {a for a, _ in all_cells}
     assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
-    assert len(all_cells) == 44, len(all_cells)
+    assert len(all_cells) == 45, len(all_cells)
     print("CELL_LIST_OK")
     """
 )

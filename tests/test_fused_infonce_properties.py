@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on the fused InfoNCE kernel invariants.
+
+Guarded by importorskip per the tests/test_properties.py convention:
+adversarially-searched counterexamples for the online-softmax identities the
+blocked kernel relies on — shift invariance, block-size independence, and
+exact masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fused_infonce.ops import fused_infonce_stats
+from repro.kernels.fused_infonce.ref import infonce_stats_ref
+
+_settings = settings(max_examples=20, deadline=None)
+
+
+def _problem(seed, m, n, d, mask_p=0.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, n, size=(m,)).astype(np.int32))
+    valid = jnp.asarray(rng.random(n) >= mask_p)
+    valid = valid.at[labels].set(True)  # each row keeps its positive column
+    return q, p, labels, valid
+
+
+@_settings
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(2, 96),
+    d=st.integers(1, 32),
+    shift=st.floats(-30.0, 30.0),
+    seed=st.integers(0, 2**16),
+)
+def test_online_softmax_shift_invariance(m, n, d, shift, seed):
+    """Adding a constant to every logit shifts lse and pos equally, so the
+    per-row loss is invariant — the identity that lets the running-max
+    accumulator renormalize partial sums across column blocks. The shift is
+    realized in rep space: append a coordinate (1, shift) to (q, p)."""
+    q, p, labels, _ = _problem(seed, m, n, d)
+    q2 = jnp.concatenate([q, jnp.ones((m, 1))], axis=1)
+    p2 = jnp.concatenate([p, jnp.full((n, 1), shift)], axis=1)
+    lse_a, pos_a, _ = fused_infonce_stats(q, p, labels, None, 1.0, 32, 32, True)
+    lse_b, pos_b, _ = fused_infonce_stats(q2, p2, labels, None, 1.0, 32, 32, True)
+    np.testing.assert_allclose(
+        np.asarray(lse_a - pos_a), np.asarray(lse_b - pos_b),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+@_settings
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(2, 200),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_block_size_independence(m, n, d, seed):
+    """The result must not depend on the tiling: block_n in {32, 64, 128}
+    (with ragged padding as needed) all agree with the dense oracle."""
+    q, p, labels, valid = _problem(seed, m, n, d, mask_p=0.2)
+    ref = infonce_stats_ref(q, p, labels, valid)
+    outs = [
+        fused_infonce_stats(q, p, labels, valid, 1.0, 32, bn, True)
+        for bn in (32, 64, 128)
+    ]
+    for out in outs:
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+            )
+    # and pairwise identical across block sizes (same fp32 accumulator path)
+    for out in outs[1:]:
+        for a, b in zip(outs[0], out):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6
+            )
+
+
+@_settings
+@given(
+    m=st.integers(1, 24),
+    n=st.integers(2, 64),
+    n_garbage=st.integers(1, 32),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_columns_never_affect_loss_or_grads(m, n, n_garbage, d, seed):
+    """Appending arbitrarily large masked columns changes nothing: loss and
+    dQ identical, and the masked columns' dP rows are exactly zero."""
+    q, p, labels, _ = _problem(seed, m, n, d)
+    rng = np.random.default_rng(seed + 1)
+    garbage = jnp.asarray(100.0 * rng.normal(size=(n_garbage, d)).astype(np.float32))
+    p2 = jnp.concatenate([p, garbage], axis=0)
+    valid2 = jnp.concatenate([jnp.ones(n, bool), jnp.zeros(n_garbage, bool)])
+
+    def loss(q_, p_, valid_):
+        lse, pos, _ = fused_infonce_stats(q_, p_, labels, valid_, 1.0, 32, 32, True)
+        return jnp.mean(lse - pos)
+
+    l1, (gq1, gp1) = jax.value_and_grad(loss, argnums=(0, 1))(q, p, None)
+    l2, (gq2, gp2) = jax.value_and_grad(loss, argnums=(0, 1))(q, p2, valid2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gq1), np.asarray(gq2), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(gp1), np.asarray(gp2[:n]), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_array_equal(np.asarray(gp2[n:]), 0.0)
