@@ -1,0 +1,141 @@
+"""Replicated vs sharded memory banks under the shard_map StepProgram path.
+
+Sweeps the dual-bank methods over bank depth on 8 forced host-platform
+devices and reports, per (method, bank, mode):
+
+  * per-device bank bytes — the memory the tentpole exists to cut: a
+    replicated bank costs (N_q + N_p) * d * 4 bytes on EVERY chip, a sharded
+    one 1/D of that;
+  * mean step wall time — the price of the extra passage-bank column
+    all-gather in sharded mode (on real interconnect this trades against the
+    HBM freed; on host-platform CPU it is mostly a sanity signal).
+
+Runs in a subprocess because the 8-device host platform must be forced via
+XLA_FLAGS before jax is first imported (benchmarks.run imports jax early),
+mirroring the tests/test_distributed.py isolation pattern.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from typing import List, Tuple
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import time
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import ContrastiveConfig, RetrievalBatch, get_shard_map
+    from repro.core.methods import build_step_program, init_state
+    from repro.distribution.sharding import contrastive_state_spec
+    from repro.models.bert import BertConfig
+    from repro.models.towers import make_bert_dual_encoder
+    from repro.optim import chain, clip_by_global_norm, sgd
+
+    quick = "--quick" in sys.argv
+    D = 8
+    assert jax.device_count() == D, jax.device_count()
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    shard_map, sm_kw = get_shard_map()
+
+    enc = make_bert_dual_encoder(BertConfig(
+        name="bench-bert", n_layers=2, d_model=64, n_heads=4, d_ff=128,
+        vocab_size=2000, max_position=64, dtype=jnp.float32,
+    ))
+    B, K, QL, PL = 64, 2, 16, 32
+    steps, warmup = (3, 1) if quick else (6, 2)
+    banks = [1024] if quick else [2048, 8192]
+
+    def make_batch(i):
+        rng = np.random.default_rng(i)
+        return RetrievalBatch(
+            query=jnp.asarray(rng.integers(0, 2000, (B, QL), dtype=np.int32)),
+            passage_pos=jnp.asarray(rng.integers(0, 2000, (B, PL), dtype=np.int32)),
+            passage_hard=None,
+        )
+
+    def bench(method, bank, shard_banks):
+        cfg = ContrastiveConfig(
+            method=method, accumulation_steps=K, bank_size=bank,
+            dp_axis=("data",), shard_banks=shard_banks,
+        )
+        tx = chain(clip_by_global_norm(2.0), sgd(0.05))
+        state = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+        spec = contrastive_state_spec(("data",), shard_banks)
+        bspec = RetrievalBatch(query=P("data"), passage_pos=P("data"),
+                               passage_hard=None)
+        update = jax.jit(shard_map(
+            build_step_program(enc, tx, cfg).update, mesh=mesh,
+            in_specs=(spec, bspec), out_specs=(spec, P()), **sm_kw,
+        ))
+        for i in range(warmup):
+            state, m = update(state, make_batch(i))
+        jax.block_until_ready(m.loss)
+        t0 = time.perf_counter()
+        for i in range(warmup, warmup + steps):
+            state, m = update(state, make_batch(i))
+        jax.block_until_ready(m.loss)
+        dt_ms = (time.perf_counter() - t0) / steps * 1e3
+
+        nq = state.bank_q.buf.shape[0]
+        np_rows = state.bank_p.buf.shape[0]
+        itemsize = jnp.dtype(cfg.bank_dtype).itemsize
+        per_dev = (nq + np_rows) * enc.rep_dim * itemsize
+        if shard_banks:
+            per_dev //= D
+        mode = "sharded" if shard_banks else "replicated"
+        print(f"ROW dist/{method}/bank{bank}/{mode}/bank_kib_per_dev "
+              f"{per_dev / 1024.0:.6g}", flush=True)
+        print(f"ROW dist/{method}/bank{bank}/{mode}/step_ms {dt_ms:.6g}",
+              flush=True)
+
+    for method in ("contaccum",) if quick else ("contaccum", "contcache"):
+        for bank in banks:
+            for shard_banks in (False, True):
+                bench(method, bank, shard_banks)
+    print("BENCH-DONE")
+    """
+)
+
+
+def run(quick: bool = False) -> List[Tuple[str, float]]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env.pop("XLA_FLAGS", None)
+    argv = [sys.executable, "-c", SCRIPT] + (["--quick"] if quick else [])
+    proc = subprocess.run(
+        argv,
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    if proc.returncode != 0 or "BENCH-DONE" not in proc.stdout:
+        raise RuntimeError(
+            f"bench_distributed subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    rows: List[Tuple[str, float]] = []
+    print(f"{'cell':<48} {'value':>12}")
+    for line in proc.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        _, name, value = line.split()
+        rows.append((name, float(value)))
+        print(f"{name:<48} {float(value):>12.4g}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -12,6 +12,7 @@ import argparse
 import time
 
 from benchmarks import (
+    bench_distributed,
     bench_fig3,
     bench_fig4,
     bench_fig5,
@@ -31,6 +32,7 @@ SUITES = {
     "regimes": bench_regimes.run,
     "roofline": bench_roofline.run,
     "fused_infonce": bench_fused_infonce.run,
+    "distributed": bench_distributed.run,
 }
 
 

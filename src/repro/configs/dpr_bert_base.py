@@ -65,6 +65,44 @@ DPR_SHAPES = {
             "n_hard": 1,
         },
     ),
+    # explicit shard_map cells: batch AND memory banks sharded over the DP
+    # axes (cfg.shard_banks) — persistent bank state shrinks to bank_size/D
+    # ring slots per device, and the fused Pallas backend keeps the (M, N)
+    # extended logits block out of HBM. The loss still all-gathers the
+    # passage-bank columns per evaluation, so a transient (bank_size, d)
+    # column block exists per device — budget for it
+    "contaccum_xdev": ShapeCell(
+        "contaccum_xdev",
+        "contrastive",
+        {
+            "method": "contaccum",
+            "global_batch": 2048,
+            "accum_steps": 4,
+            "bank_size": 8192,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "xdev": True,
+            "shard_banks": True,
+            "loss_impl": "fused",
+        },
+    ),
+    # full-batch rep-cache backprop + sharded dual banks under shard_map
+    "contcache_xdev": ShapeCell(
+        "contcache_xdev",
+        "contrastive",
+        {
+            "method": "contcache",
+            "global_batch": 2048,
+            "accum_steps": 16,
+            "bank_size": 8192,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "xdev": True,
+            "shard_banks": True,
+        },
+    ),
     # ... and cached-VJP + passage-only bank (pre-batch negatives)
     "prebatch_cache_batch": ShapeCell(
         "prebatch_cache_batch",

@@ -5,15 +5,17 @@ for dual-encoder retrieval (ContAccum) plus the baselines it is compared to.
 from repro.core.infonce import info_nce, in_batch_loss, extended_loss, similarity_logits, InfoNCEOutput
 from repro.core.memory_bank import (
     BankState, init_bank, push, push_pair, clear, n_valid, ordered,
-    aligned_valid, capacity, columns_view,
+    aligned_valid, capacity, columns_view, shard_push, shard_push_pair,
+    bank_spec,
 )
 from repro.core.loss import (
     contrastive_loss, contrastive_step_loss, LossAux,
     ExtraColumns, ExtraRows, bank_extra_columns, bank_extra_rows,
+    sharded_bank_extra_columns, sharded_bank_extra_rows,
     LossBackend, DenseLossBackend, FusedLossBackend, LOSS_BACKENDS,
     resolve_loss_backend,
 )
-from repro.core.dist import DistCtx
+from repro.core.dist import DistCtx, get_shard_map
 from repro.core.step_program import (
     COMPOSITIONS,
     SOURCES,
@@ -49,12 +51,14 @@ from repro.core.methods import (
 __all__ = [
     "info_nce", "in_batch_loss", "extended_loss", "similarity_logits", "InfoNCEOutput",
     "BankState", "init_bank", "push", "push_pair", "clear", "n_valid", "ordered",
-    "aligned_valid", "capacity", "columns_view",
+    "aligned_valid", "capacity", "columns_view", "shard_push", "shard_push_pair",
+    "bank_spec",
     "contrastive_loss", "contrastive_step_loss", "LossAux",
     "ExtraColumns", "ExtraRows", "bank_extra_columns", "bank_extra_rows",
+    "sharded_bank_extra_columns", "sharded_bank_extra_rows",
     "LossBackend", "DenseLossBackend", "FusedLossBackend", "LOSS_BACKENDS",
     "resolve_loss_backend",
-    "DistCtx",
+    "DistCtx", "get_shard_map",
     "ContrastiveConfig", "ContrastiveState", "DualEncoder", "RetrievalBatch",
     "StepMetrics", "chunk_tree", "flatten_hard",
     "COMPOSITIONS", "SOURCES", "STRATEGIES",

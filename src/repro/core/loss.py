@@ -80,14 +80,19 @@ class ExtraColumns(NamedTuple):
 class ExtraRows(NamedTuple):
     """Extra query rows owned by a negative source (e.g. a query bank).
 
-    Rows are replicated across devices; each device contributes a 1/D share
-    so the psum reproduces their sum exactly once. ``labels`` index into the
-    source's ExtraColumns block (the loss adds the in-batch column offset).
-    ``weight`` in [0, 1] scales each row's contribution (0 masks it out)."""
+    ``sharded=False`` (default): rows are replicated across devices; each
+    device contributes a 1/D share so the psum reproduces their sum exactly
+    once. ``sharded=True``: each device's rows are a distinct 1/D partition
+    of the global row set (sharded memory banks) and enter the sum at full
+    weight — the psum still counts every global row exactly once. ``labels``
+    index into the source's ExtraColumns block *in its global (gathered)
+    layout* (the loss adds the in-batch column offset). ``weight`` in [0, 1]
+    scales each row's contribution (0 masks it out)."""
 
     reps: jnp.ndarray    # (R, d)
     labels: jnp.ndarray  # (R,) int32 — positive's index within ExtraColumns
     weight: jnp.ndarray  # (R,) float32
+    sharded: bool = False
 
 
 # --------------------------------------------------------------------------
@@ -249,7 +254,10 @@ def contrastive_loss(
             extra_rows.reps.astype(q_local.dtype), labels_extra
         )
         w = extra_rows.weight.astype(jnp.float32)
-        inv_d = 1.0 / ctx.device_count()
+        # replicated rows: every device computes all R rows, each contributes
+        # a 1/D share; sharded rows: the R local rows are this device's own
+        # partition of the global set, so they enter at full weight
+        inv_d = 1.0 if extra_rows.sharded else 1.0 / ctx.device_count()
         loss_sum = loss_sum + inv_d * jnp.sum(per_row_extra * w)
         correct_sum = correct_sum + inv_d * jnp.sum(correct_extra * w)
         n_rows_dev = n_rows_dev + inv_d * w.sum()
@@ -291,6 +299,41 @@ def bank_extra_rows(
         reps=bank_q.buf,
         labels=jnp.arange(cq, dtype=jnp.int32),
         weight=aligned_valid(bank_q, bank_p).astype(jnp.float32),
+    )
+
+
+def sharded_bank_extra_columns(
+    bank_p: Optional[BankState], ctx: DistCtx
+) -> Optional[ExtraColumns]:
+    """Shard-local passage bank -> the *global* extra-column block: rows and
+    validity are all-gathered over the DP axes (shard-major concatenation
+    matches the bank's global ring layout — see memory_bank.shard_push). The
+    gathered block feeds either backend; under the fused Pallas kernel it
+    streams tile-by-tile through VMEM so the extended similarity matrix
+    still never materializes in HBM."""
+    if bank_p is None or bank_p.buf.shape[0] == 0:
+        return None
+    return ExtraColumns(reps=ctx.gather(bank_p.buf), valid=ctx.gather(bank_p.valid))
+
+
+def sharded_bank_extra_rows(
+    bank_q: Optional[BankState], bank_p: Optional[BankState], ctx: DistCtx
+) -> Optional[ExtraRows]:
+    """Shard-local dual banks -> this device's partition of the extra query
+    rows. No gather is needed: each device evaluates only its own bank rows
+    (labels offset into the gathered column block by the shard's global slot
+    offset), and the psum sums every global row exactly once."""
+    if bank_q is None or bank_q.buf.shape[0] == 0:
+        return None
+    if bank_p is None or bank_p.buf.shape[0] == 0:
+        return None
+    cap_local = bank_q.buf.shape[0]
+    offset = jnp.asarray(ctx.shard_index(), jnp.int32) * cap_local
+    return ExtraRows(
+        reps=bank_q.buf,
+        labels=offset + jnp.arange(cap_local, dtype=jnp.int32),
+        weight=aligned_valid(bank_q, bank_p).astype(jnp.float32),
+        sharded=True,
     )
 
 

@@ -9,6 +9,17 @@ The *dual* structure (equal-size query and passage banks, pushed in lockstep)
 is the paper's core stability contribution: Sec. 3.3 shows that a
 passage-only bank (pre-batch negatives) yields a systematic gradient-norm
 imbalance between the two encoders.
+
+Two distribution modes (core/step_program.py, ``cfg.shard_banks``):
+
+  * **replicated** (default) — every device carries the full ring and pushes
+    the gathered global rows (``push`` / ``push_pair``); banks stay identical
+    across devices.
+  * **sharded** — each device owns a ``capacity/D`` contiguous block of ring
+    slots, laid out shard-major so ``DistCtx.gather`` over the shards
+    reconstructs the replicated ring exactly (``shard_push`` /
+    ``shard_push_pair``; ``bank_spec`` gives the PartitionSpecs). Per-device
+    bank HBM shrinks by 1/D at identical math.
 """
 
 from __future__ import annotations
@@ -92,6 +103,76 @@ def push_pair(
     return push(bank_q, q, step), push(bank_p, p, step)
 
 
+def shard_push(
+    bank: BankState,
+    x: jnp.ndarray,
+    step: jnp.ndarray | int = 0,
+    *,
+    shard_index,
+    num_shards: int,
+) -> BankState:
+    """Shard-local ``push``: write only this device's rows of a globally
+    ring-addressed enqueue.
+
+    ``bank`` is the local ``capacity_global / num_shards`` shard of a global
+    ring laid out shard-major (shard i owns global slots
+    ``[i*cap_local, (i+1)*cap_local)`` — the same order ``DistCtx.gather``
+    concatenates shards in). ``x`` is the full replicated global row block
+    (every device sees the same gathered representations) and ``bank.head``
+    is the replicated *global* head, so all shards advance it identically.
+    The union of all shards after a shard_push is bit-identical to a
+    replicated ``push`` of the same rows (tests/test_memory_bank.py)."""
+    x = jax.lax.stop_gradient(x)
+    n = x.shape[0]
+    cap_local = bank.buf.shape[0]
+    cap_global = cap_local * num_shards
+    if n == 0 or cap_local == 0:
+        return bank
+    start = bank.head
+    if n > cap_global:
+        x = x[n - cap_global :]
+        start = bank.head + (n - cap_global)
+        n = cap_global
+    gidx = (start + jnp.arange(n, dtype=jnp.int32)) % cap_global
+    lidx = gidx - jnp.asarray(shard_index, jnp.int32) * cap_local
+    # rows owned by other shards are pushed out of range; mode="drop"
+    # discards them (cap_local itself is out of bounds for a (cap_local,)
+    # buffer)
+    lidx = jnp.where((lidx >= 0) & (lidx < cap_local), lidx, cap_local)
+    buf = bank.buf.at[lidx].set(x.astype(bank.buf.dtype), mode="drop")
+    valid = bank.valid.at[lidx].set(True, mode="drop")
+    age = bank.age.at[lidx].set(jnp.asarray(step, dtype=jnp.int32), mode="drop")
+    head = (start + n) % cap_global
+    return BankState(buf=buf, valid=valid, head=head, age=age)
+
+
+def shard_push_pair(
+    bank_q: BankState,
+    bank_p: BankState,
+    q: jnp.ndarray,
+    p: jnp.ndarray,
+    step: jnp.ndarray | int = 0,
+    *,
+    shard_index,
+    num_shards: int,
+) -> Tuple[BankState, BankState]:
+    """Lockstep ``shard_push`` of both banks (see push_pair)."""
+    assert q.shape[0] == p.shape[0], "dual banks must be pushed in lockstep"
+    kw = dict(shard_index=shard_index, num_shards=num_shards)
+    return shard_push(bank_q, q, step, **kw), shard_push(bank_p, p, step, **kw)
+
+
+def bank_spec(axes=None) -> BankState:
+    """BankState-shaped PartitionSpecs: rows (buf/valid/age) sharded over
+    ``axes`` (a mesh-axis name or tuple of names), the global head replicated.
+    ``axes=None`` returns the fully replicated spec (the default mode where
+    every device carries the whole bank)."""
+    from jax.sharding import PartitionSpec as P
+
+    row = P() if axes is None else P(tuple(axes) if not isinstance(axes, str) else axes)
+    return BankState(buf=row, valid=row, head=P(), age=row)
+
+
 def capacity(bank: BankState) -> int:
     """Static capacity of the ring (0 for a disabled bank)."""
     return bank.buf.shape[0]
@@ -109,12 +190,21 @@ def columns_view(bank: BankState) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def aligned_valid(bank_q: BankState, bank_p: BankState) -> jnp.ndarray:
     """(cq,) bool — slots where bank_q row i and bank_p row i hold an aligned
     (query, positive-passage) pair. Pushed-in-lockstep banks (push_pair) are
-    aligned by ring index; with unequal capacities only the common prefix can
-    ever align (the pre-batch ablation has cq == 0, so no rows)."""
+    aligned by ring index only when the capacities are equal: heads advance
+    mod their own capacity, so with ``cq != cp`` the pairing silently breaks
+    as soon as either ring wraps. Unequal non-zero capacities are therefore
+    rejected; a disabled bank (capacity 0, the pre-batch ablation) yields no
+    aligned rows."""
     cq, cp = bank_q.buf.shape[0], bank_p.buf.shape[0]
-    c_align = min(cq, cp)
-    aligned = jnp.zeros((cq,), dtype=bool)
-    return aligned.at[:c_align].set(bank_q.valid[:c_align] & bank_p.valid[:c_align])
+    if cq == 0 or cp == 0:
+        return jnp.zeros((cq,), dtype=bool)
+    if cq != cp:
+        raise ValueError(
+            f"dual banks must have equal capacities to stay ring-aligned "
+            f"(got bank_q capacity {cq} != bank_p capacity {cp}); after a "
+            f"ring wrap row i of M_q no longer pairs with row i of M_p"
+        )
+    return bank_q.valid & bank_p.valid
 
 
 def ordered(bank: BankState) -> Tuple[jnp.ndarray, jnp.ndarray]:

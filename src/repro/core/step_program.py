@@ -41,6 +41,15 @@ Orthogonal to both axes, ``cfg.loss_impl`` picks the **LossBackend**
 blocked online-softmax Pallas kernel) — every source x strategy composition
 runs on either backend, gradient-exact to fp32 tolerance
 (tests/test_fused_infonce.py).
+
+Also orthogonal, ``cfg.shard_banks`` picks the bank **distribution mode**
+under shard_map: replicated (default — every device carries the full rings
+and pushes the gathered global rows) or sharded (each device owns a
+``capacity/D`` ring-slot block; pushes write only local rows, the loss
+gathers the passage-bank columns over ``cfg.dp_axis`` and evaluates only the
+local query-bank rows). Both modes are trajectory-identical to the
+single-device replicated run (tests/test_distributed.py); sharded mode cuts
+per-device bank HBM and extra-row compute by 1/D.
 """
 
 from __future__ import annotations
@@ -60,8 +69,18 @@ from repro.core.loss import (
     bank_extra_rows,
     contrastive_loss,
     resolve_loss_backend,
+    sharded_bank_extra_columns,
+    sharded_bank_extra_rows,
 )
-from repro.core.memory_bank import BankState, clear, init_bank, push, push_pair
+from repro.core.memory_bank import (
+    BankState,
+    clear,
+    init_bank,
+    push,
+    push_pair,
+    shard_push,
+    shard_push_pair,
+)
 from repro.core.types import (
     ContrastiveConfig,
     ContrastiveState,
@@ -109,16 +128,27 @@ class NegativeSource(Protocol):
         ph: Optional[jnp.ndarray],
         carry: Carry,
         *,
-        temperature: float,
+        cfg: ContrastiveConfig,
         ctx: DistCtx,
         backend: Optional[LossBackend] = None,
     ) -> Tuple[jnp.ndarray, LossAux]:
         """One loss evaluation with this source's columns/rows/masks,
-        computed by ``backend`` (None -> dense)."""
+        computed by ``backend`` (None -> dense). ``cfg`` carries the
+        temperature and the bank distribution mode (``shard_banks``)."""
         ...
 
-    def push(self, carry: Carry, aux: LossAux, step: jnp.ndarray) -> Carry:
-        """Update carried state after one loss evaluation (bank pushes)."""
+    def push(
+        self,
+        carry: Carry,
+        aux: LossAux,
+        step: jnp.ndarray,
+        *,
+        cfg: ContrastiveConfig,
+        ctx: DistCtx,
+    ) -> Carry:
+        """Update carried state after one loss evaluation (bank pushes).
+        Shard-aware: with ``cfg.shard_banks`` each device writes only its own
+        ring-slot block of the gathered global rows."""
         ...
 
 
@@ -141,12 +171,12 @@ class InBatchNegatives:
     def begin(self, state, cfg):
         return (state.bank_q, state.bank_p)
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
+    def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         return contrastive_loss(
-            q, pp, ph, temperature=temperature, ctx=ctx, backend=backend
+            q, pp, ph, temperature=cfg.temperature, ctx=ctx, backend=backend
         )
 
-    def push(self, carry, aux, step):
+    def push(self, carry, aux, step, *, cfg, ctx):
         return carry
 
 
@@ -182,28 +212,61 @@ class DualBankNegatives:
     def validate(self, cfg):
         # bank-less dual-bank degrades exactly to in-batch; allowed (the
         # warm-up / reduction identities rely on it)
-        pass
+        nq, np_ = self.bank_sizes(cfg)
+        if nq and np_ and nq != np_:
+            raise ValueError(
+                f"dual banks need equal non-zero capacities to stay "
+                f"ring-aligned (got bank_size_q={nq}, bank_size_p={np_}): "
+                f"heads advance mod different capacities, so after a wrap "
+                f"row i of M_q no longer holds the query whose positive is "
+                f"row i of M_p. Use bank_size=, or disable one bank "
+                f"(capacity 0) for the pre-batch ablation."
+            )
+        if cfg.shard_banks and cfg.dp_axis is None:
+            raise ValueError(
+                "shard_banks=True needs cfg.dp_axis naming the mesh axes the "
+                "bank rows are sharded over (single-device banks are already "
+                "'sharded' into one shard — just leave shard_banks off)"
+            )
 
     def begin(self, state, cfg):
         if cfg.reset_banks_each_update:
             return (clear(state.bank_q), clear(state.bank_p))
         return (state.bank_q, state.bank_p)
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
+    def _sharded(self, cfg, ctx) -> bool:
+        return cfg.shard_banks and ctx.is_distributed
+
+    def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         bank_q, bank_p = carry
+        if self._sharded(cfg, ctx):
+            # shard-local banks: columns gathered to the global block, rows
+            # evaluated locally (each device owns a distinct 1/D partition)
+            extra_cols = sharded_bank_extra_columns(bank_p, ctx)
+            extra_rows = sharded_bank_extra_rows(bank_q, bank_p, ctx)
+        else:
+            extra_cols = bank_extra_columns(bank_p)
+            extra_rows = bank_extra_rows(bank_q, bank_p)
         return contrastive_loss(
             q,
             pp,
             ph,
-            extra_cols=bank_extra_columns(bank_p),
-            extra_rows=bank_extra_rows(bank_q, bank_p),
-            temperature=temperature,
+            extra_cols=extra_cols,
+            extra_rows=extra_rows,
+            temperature=cfg.temperature,
             ctx=ctx,
             backend=backend,
         )
 
-    def push(self, carry, aux, step):
+    def push(self, carry, aux, step, *, cfg, ctx):
         bank_q, bank_p = carry
+        if self._sharded(cfg, ctx):
+            # each device writes only its own ring-slot block of the global
+            # rows; the replicated global head advances identically everywhere
+            return shard_push_pair(
+                bank_q, bank_p, aux.q_global, aux.p_global, step,
+                shard_index=ctx.shard_index(), num_shards=ctx.device_count(),
+            )
         # Enqueue the *global* representations (identical on all devices in
         # distributed mode -> banks stay replicated).
         return push_pair(bank_q, bank_p, aux.q_global, aux.p_global, step)
@@ -220,20 +283,30 @@ class PassageBankNegatives(DualBankNegatives):
         _, np_ = cfg.resolved_bank_sizes()
         return 0, np_
 
-    def loss(self, q, pp, ph, carry, *, temperature, ctx, backend=None):
+    def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         _, bank_p = carry
+        extra_cols = (
+            sharded_bank_extra_columns(bank_p, ctx)
+            if self._sharded(cfg, ctx)
+            else bank_extra_columns(bank_p)
+        )
         return contrastive_loss(
             q,
             pp,
             ph,
-            extra_cols=bank_extra_columns(bank_p),
-            temperature=temperature,
+            extra_cols=extra_cols,
+            temperature=cfg.temperature,
             ctx=ctx,
             backend=backend,
         )
 
-    def push(self, carry, aux, step):
+    def push(self, carry, aux, step, *, cfg, ctx):
         bank_q, bank_p = carry
+        if self._sharded(cfg, ctx):
+            return bank_q, shard_push(
+                bank_p, aux.p_global, step,
+                shard_index=ctx.shard_index(), num_shards=ctx.device_count(),
+            )
         return bank_q, push(bank_p, aux.p_global, step)
 
 
@@ -283,10 +356,17 @@ def _chunk_batch(batch: RetrievalBatch, k: int) -> RetrievalBatch:
 
 
 def _reduce_scanned_aux(auxs: LossAux) -> LossAux:
+    """Reduce per-chunk aux to update-level metrics. Each chunk's loss /
+    accuracy is already a mean over that chunk's rows, and the row counts
+    differ while the banks warm up (later chunks see more valid extra rows) —
+    so the chunks are recombined weighted by ``n_rows``, giving the exact
+    mean over every row of the update rather than a mean of chunk means."""
+    n = auxs.n_rows
+    n_total = jnp.maximum(n.sum(), 1.0)
     return LossAux(
-        loss=auxs.loss.mean(),
-        accuracy=auxs.accuracy.mean(),
-        n_rows=auxs.n_rows.sum(),
+        loss=(auxs.loss * n).sum() / n_total,
+        accuracy=(auxs.accuracy * n).sum() / n_total,
+        n_rows=n.sum(),
         n_negatives=auxs.n_negatives.mean(),
         q_global=auxs.q_global,
         p_global=auxs.p_global,
@@ -306,14 +386,11 @@ class DirectBackprop:
 
         def loss_fn(p):
             q, pp, ph = _encode_chunk(encoder, p, batch)
-            return source.loss(
-                q, pp, ph, carry, temperature=cfg.temperature, ctx=ctx,
-                backend=backend,
-            )
+            return source.loss(q, pp, ph, carry, cfg=cfg, ctx=ctx, backend=backend)
 
         (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         grads = ctx.psum_tree(grads)
-        carry = source.push(carry, aux, step)
+        carry = source.push(carry, aux, step, cfg=cfg, ctx=ctx)
         return grads, aux, carry
 
 
@@ -339,12 +416,11 @@ class ScanAccumulate:
             def loss_fn(p):
                 q, pp, ph = _encode_chunk(encoder, p, chunk)
                 return source.loss(
-                    q, pp, ph, carry_, temperature=cfg.temperature, ctx=ctx,
-                    backend=backend,
+                    q, pp, ph, carry_, cfg=cfg, ctx=ctx, backend=backend
                 )
 
             (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
-            carry_ = source.push(carry_, aux, step)
+            carry_ = source.push(carry_, aux, step, cfg=cfg, ctx=ctx)
             return (tree_add(grads_acc, g), carry_), aux
 
         (grads, carry), auxs = jax.lax.scan(
@@ -397,7 +473,7 @@ class RepCacheVJP:
                 pp_all,
                 ph_all if has_hard else None,
                 carry,
-                temperature=cfg.temperature,
+                cfg=cfg,
                 ctx=ctx,
                 backend=backend,
             )
@@ -427,7 +503,7 @@ class RepCacheVJP:
             bwd, tree_zeros_like(params), (chunks, (gq, gpp, gph))
         )
         grads = ctx.psum_tree(grads)
-        carry = source.push(carry, aux, step)
+        carry = source.push(carry, aux, step, cfg=cfg, ctx=ctx)
         return grads, aux, carry
 
 
@@ -519,9 +595,26 @@ class StepProgram:
         return f"{self.source.name}*{self.strategy.name}"
 
 
-def _metrics(grads, aux: LossAux, bank_q: BankState, bank_p: BankState) -> StepMetrics:
+def _metrics(
+    grads,
+    aux: LossAux,
+    bank_q: BankState,
+    bank_p: BankState,
+    *,
+    ctx: Optional[DistCtx] = None,
+    sharded_banks: bool = False,
+) -> StepMetrics:
     gq = subtree_norm(grads, "query")
     gp = subtree_norm(grads, "passage")
+
+    def fill(bank: BankState) -> jnp.ndarray:
+        if not bank.buf.shape[0]:
+            return jnp.zeros(())
+        f = bank.valid.sum().astype(jnp.float32)
+        # shard-local fills differ across devices mid-warm-up (low ring slots
+        # fill first); psum to the replicated global fill
+        return ctx.psum(f) if sharded_banks and ctx is not None else f
+
     return StepMetrics(
         loss=aux.loss,
         accuracy=aux.accuracy,
@@ -530,8 +623,8 @@ def _metrics(grads, aux: LossAux, bank_q: BankState, bank_p: BankState) -> StepM
         grad_norm_passage=gp,
         grad_norm_ratio=gp / jnp.maximum(gq, 1e-12),
         n_negatives=aux.n_negatives,
-        bank_fill_q=bank_q.valid.sum().astype(jnp.float32) if bank_q.buf.shape[0] else jnp.zeros(()),
-        bank_fill_p=bank_p.valid.sum().astype(jnp.float32) if bank_p.buf.shape[0] else jnp.zeros(()),
+        bank_fill_q=fill(bank_q),
+        bank_fill_p=fill(bank_p),
     )
 
 
@@ -569,7 +662,10 @@ def build_step_program(
         )
         bank_q, bank_p = carry
         new_state = _apply(state, grads, tx, bank_q, bank_p)
-        return new_state, _metrics(grads, aux, bank_q, bank_p)
+        return new_state, _metrics(
+            grads, aux, bank_q, bank_p,
+            ctx=ctx, sharded_banks=cfg.shard_banks and ctx.is_distributed,
+        )
 
     return StepProgram(update=update, source=source, strategy=strategy, cfg=cfg)
 

@@ -53,7 +53,9 @@ class ContrastiveConfig:
     accumulation_steps: K. Global batch B must be divisible by K.
     bank_size: N_memory (equal for both banks unless overridden — the paper's
         dual-bank symmetry; ``bank_size_q``/``bank_size_p`` override for the
-        pre-batch-negatives ablation).
+        pre-batch-negatives ablation by *disabling* one bank. Unequal
+        non-zero capacities are rejected for dual-bank sources: the rings
+        stop being slot-aligned as soon as either wraps).
     reset_banks_each_update: 'w/o past encoder' ablation (Table 2).
     use_query_bank: False reproduces pre-batch negatives (w/o M_q, Table 2).
     loss_impl: 'dense' | 'fused' — how the loss's softmax statistics are
@@ -61,6 +63,15 @@ class ContrastiveConfig:
         the (M, N) logits block; 'fused' streams it through the blocked
         online-softmax Pallas kernel (gradient-exact, never materialized).
         Composes with every negatives/backprop setting.
+    shard_banks: shard the memory banks across the DP mesh instead of
+        replicating them. Each device owns a ``bank_size / D`` contiguous
+        block of ring slots (memory_bank.shard_push); the loss gathers the
+        passage-bank columns over ``dp_axis`` and evaluates only the local
+        query-bank rows. Identical math to replicated banks (trajectory
+        parity in tests/test_distributed.py) at 1/D the per-device bank HBM.
+        Requires ``dp_axis``; only meaningful under shard_map with the bank
+        leaves sharded by ``memory_bank.bank_spec`` /
+        ``distribution.sharding.contrastive_state_spec``.
     """
 
     method: str = "contaccum"
@@ -79,6 +90,9 @@ class ContrastiveConfig:
     # Cross-device negatives: name(s) of mesh axes to all-gather representations
     # over; None means single-device semantics.
     dp_axis: Optional[Any] = None
+    # Shard the memory banks over dp_axis (capacity/D rows per device)
+    # instead of replicating them; see the class docstring.
+    shard_banks: bool = False
 
     def resolved_bank_sizes(self):
         nq = self.bank_size if self.bank_size_q is None else self.bank_size_q

@@ -85,6 +85,35 @@ GNN_RULES: ShardingRules = [
     (r".*", P()),  # SchNet is tiny (~100k params): replicate everything
 ]
 
+
+# ------------------------------------------------- contrastive memory banks
+def bank_rules(dp: Tuple[str, ...], shard_banks: bool) -> ShardingRules:
+    """Partition rules for the ContrastiveState memory banks: with
+    ``shard_banks`` the ring rows (buf/valid/age) are sharded over the DP
+    axes — each device owns a contiguous ``capacity/D`` slot block, matching
+    memory_bank.shard_push's shard-major global layout — while the global
+    head stays replicated. Without it the banks replicate (the default)."""
+    if not shard_banks:
+        return [(r"bank_[qp]\b", P())]
+    return [
+        (r"bank_[qp].*head$", P()),
+        (r"bank_[qp]\b", P(dp)),
+    ]
+
+
+def contrastive_state_spec(dp: Tuple[str, ...], shard_banks: bool):
+    """ContrastiveState-shaped PartitionSpec prefix-tree for shard_map
+    in/out_specs on the StepProgram update: params/optimizer replicated
+    (pure DP), banks per ``bank_rules``. Pair with a batch spec of
+    ``P(dp)`` on every RetrievalBatch leaf."""
+    from repro.core.memory_bank import bank_spec
+    from repro.core.types import ContrastiveState
+
+    banks = bank_spec(dp) if shard_banks else bank_spec(None)
+    return ContrastiveState(
+        step=P(), params=P(), opt_state=P(), bank_q=banks, bank_p=banks
+    )
+
 # ---------------------------------------------------------------- recsys
 # The stacked table is row-sharded over BOTH in-pod axes: dlrm-mlperf is
 # 188M rows x 128 = 96 GB fp32; over "model" alone (16) that is 6 GB of

@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.common.treemath import tree_add, tree_scale, tree_zeros_like
 from repro.configs import get_arch, list_archs
 from repro.configs.base import ArchSpec, ShapeCell
+from repro.core.dist import get_shard_map
 from repro.core.methods import build_step_program, init_state
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.distribution.sharding import (
@@ -40,6 +41,8 @@ from repro.distribution.sharding import (
     GNN_RULES,
     LM_RULES,
     RECSYS_RULES,
+    bank_rules,
+    contrastive_state_spec,
     dp_axes,
     make_param_shardings,
 )
@@ -510,8 +513,30 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     # over every mesh axis — removes the weight-contraction activation
     # all-reduces that dominated the baseline (12 x 67.5 GiB wire/step).
     # Sharding rules stay selectable: "tp_fsdp" reproduces the baseline.
+    # xdev: explicit shard_map over the DP axes instead of single-program
+    # GSPMD — required for cfg.shard_banks (each device owns bank_size/D
+    # ring slots; batch sharded, weights replicated, collectives by name)
+    xdev = p.get("xdev", False)
+    shard_banks = bool(p.get("shard_banks", False))
+    if shard_banks and not xdev:
+        raise ValueError(
+            "cell sets shard_banks without xdev: sharded banks need the "
+            "explicit shard_map path (bank leaves sharded by bank_spec); "
+            "the single-program GSPMD path would silently replicate them"
+        )
     mode = p.get("sharding", "pure_dp")
-    if mode == "pure_dp":
+    if xdev:
+        dp = dp_axes(mesh)
+        if p["global_batch"] % _axes_size(mesh, dp) or (
+            shard_banks and p["bank_size"] % _axes_size(mesh, dp)
+        ):
+            raise ValueError(
+                f"xdev cell needs global_batch ({p['global_batch']}) and a "
+                f"sharded bank_size ({p['bank_size']}) divisible by the DP "
+                f"axes {dp} (= {_axes_size(mesh, dp)} shards)"
+            )
+        rules = bank_rules(dp, shard_banks) + [(r".*", P())]
+    elif mode == "pure_dp":
         # largest axis prefix that divides the global batch (paper_batch's
         # B=128 < 256 chips: the paper's own geometry deliberately under-
         # fills a pod — remaining ranks replicate)
@@ -540,9 +565,11 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
         # online-softmax kernel (compiled on TPU, interpreter elsewhere)
         loss_impl=p.get("loss_impl", "dense"),
         temperature=1.0,
-        # dp_axis=None: single-program semantics; GSPMD derives the
-        # cross-device negative all-gathers from the batch sharding.
-        dp_axis=None,
+        # xdev: explicit collectives over the named DP axes (shard_map).
+        # Otherwise dp_axis=None: single-program semantics; GSPMD derives
+        # the cross-device negative all-gathers from the batch sharding.
+        dp_axis=dp if xdev else None,
+        shard_banks=shard_banks,
     )
     enc = make_bert_dual_encoder(bcfg)
     tx = chain(
@@ -551,6 +578,21 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     )
     program = build_step_program(enc, tx, ccfg)
     update = program.update
+    if xdev:
+        sm, sm_kw = get_shard_map()
+        state_spec = contrastive_state_spec(dp, shard_banks)
+        batch_spec = RetrievalBatch(
+            query=P(dp, None),
+            passage_pos=P(dp, None),
+            passage_hard=P(dp, None, None),
+        )
+        update = sm(
+            program.update,
+            mesh=mesh,
+            in_specs=(state_spec, batch_spec),
+            out_specs=(state_spec, P()),
+            **sm_kw,
+        )
 
     state_s = jax.eval_shape(
         lambda: init_state(jax.random.PRNGKey(0), enc, tx, ccfg)
@@ -566,6 +608,10 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
 
     tokens = b * (ql + pl * (1 + h))
     nq, np_ = program.source.bank_sizes(ccfg)
+    bank_shards = _axes_size(mesh, dp) if shard_banks else 1
+    bank_bytes_dev = (
+        (nq + np_) * bcfg.d_model * jnp.dtype(ccfg.bank_dtype).itemsize
+    ) // bank_shards
     if program.strategy.name == "rep_cache":
         # one full-batch similarity matrix regardless of K
         rows, cols, n_mats = b + nq, b * (1 + h) + np_, 1
@@ -585,6 +631,10 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "negatives": program.source.name,
             "backprop": program.strategy.name,
             "loss_impl": ccfg.loss_impl,
+            "xdev": xdev,
+            "shard_banks": shard_banks,
+            "bank_shards": bank_shards,
+            "bank_bytes_per_device": float(bank_bytes_dev),
         },
     )
 

@@ -6,6 +6,16 @@ lower for the production meshes via launch/dryrun.py.
   PYTHONPATH=src python -m repro.launch.train \
       --method contaccum --total-batch 128 --local-batch 8 --bank 512 \
       --steps 200 --checkpoint-dir /tmp/ckpt
+
+Data-parallel shard_map path (requires >= N devices, e.g.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU): ``--dp N``
+shards the batch over an N-way mesh with cross-device in-batch negatives;
+``--shard-banks`` additionally gives each device a bank/N shard of the
+memory banks instead of replicating them (core/step_program.py).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train \
+      --method contaccum --dp 8 --shard-banks --total-batch 64 --bank 256
 """
 
 from __future__ import annotations
@@ -16,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dist import get_shard_map
 from repro.core.methods import (
     available_methods,
     build_step_program,
@@ -59,6 +70,12 @@ def main(argv=None):
     ap.add_argument("--total-batch", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--bank", type=int, default=256)
+    ap.add_argument("--dp", type=int, default=0,
+                    help="shard_map the update over N data-parallel devices "
+                         "(0 = single-program; needs jax.device_count() >= N)")
+    ap.add_argument("--shard-banks", action="store_true",
+                    help="shard the memory banks over the DP mesh "
+                         "(bank/N rows per device) instead of replicating")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--corpus-size", type=int, default=2048)
@@ -67,22 +84,62 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    k = max(args.total_batch // args.local_batch, 1)
+    dp = args.dp
+    if args.shard_banks and not dp:
+        raise SystemExit("--shard-banks needs --dp N (banks shard over the DP mesh)")
+    if args.shard_banks and not method_uses_banks(args.method):
+        raise SystemExit(f"--shard-banks: method {args.method!r} has no memory banks")
+    if dp:
+        if jax.device_count() < dp:
+            raise SystemExit(
+                f"--dp {dp} needs >= {dp} devices (have {jax.device_count()}; "
+                f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count={dp})"
+            )
+        if args.total_batch % dp:
+            raise SystemExit(f"--total-batch {args.total_batch} not divisible by --dp {dp}")
+        if args.shard_banks and args.bank % dp:
+            raise SystemExit(f"--bank {args.bank} not divisible by --dp {dp}")
+
+    bank = args.bank if method_uses_banks(args.method) else 0
+    # with --dp the per-device batch is total/dp; accumulation chunks split
+    # the *local* batch so K still targets --local-batch rows per chunk
+    k = max(args.total_batch // max(dp, 1) // args.local_batch, 1)
     _, backprop = method_composition(args.method)
     cfg = ContrastiveConfig(
         method=args.method,
         accumulation_steps=k if backprop != "direct" else 1,
-        bank_size=args.bank if method_uses_banks(args.method) else 0,
+        bank_size=bank,
         loss_impl=args.loss_impl,
         temperature=1.0,
         grad_clip_norm=2.0,
+        dp_axis="data" if dp else None,
+        shard_banks=bool(args.shard_banks and dp and bank),
     )
     enc = make_bert_dual_encoder(tiny_bert())
     tx = chain(
         clip_by_global_norm(cfg.grad_clip_norm),
         adamw(linear_warmup_linear_decay(args.lr, args.steps // 10, args.steps)),
     )
-    update = jax.jit(build_step_program(enc, tx, cfg).update, donate_argnums=(0,))
+    program = build_step_program(enc, tx, cfg)
+    update = program.update
+    if dp:
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.core.types import RetrievalBatch as RB
+        from repro.distribution.sharding import contrastive_state_spec
+
+        mesh = Mesh(np.array(jax.devices()[:dp]), ("data",))
+        sm, sm_kw = get_shard_map()
+        state_spec = contrastive_state_spec(("data",), cfg.shard_banks)
+        batch_spec = RB(query=P("data"), passage_pos=P("data"), passage_hard=P("data"))
+        update = sm(
+            update,
+            mesh=mesh,
+            in_specs=(state_spec, batch_spec),
+            out_specs=(state_spec, P()),
+            **sm_kw,
+        )
+    update = jax.jit(update, donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(args.seed), enc, tx, cfg)
 
     corpus = SyntheticRetrievalCorpus(

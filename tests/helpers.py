@@ -15,15 +15,11 @@ from repro.core.types import DualEncoder, RetrievalBatch
 
 def get_shard_map():
     """(shard_map, kwargs) across jax versions: >= 0.5 has jax.shard_map with
-    ``check_vma``; older releases keep it in experimental with ``check_rep``."""
-    import inspect
+    ``check_vma``; older releases keep it in experimental with ``check_rep``.
+    Delegates to the production helper so tests and launch code can't drift."""
+    from repro.core.dist import get_shard_map as _impl
 
-    sm = getattr(jax, "shard_map", None)
-    if sm is None:
-        from jax.experimental.shard_map import shard_map as sm
-    if "check_vma" in inspect.signature(sm).parameters:
-        return sm, {"check_vma": False}
-    return sm, {"check_rep": False}
+    return _impl()
 
 
 def make_mlp_encoder(dim_in: int = 16, dim_hidden: int = 32, dim_rep: int = 8) -> DualEncoder:

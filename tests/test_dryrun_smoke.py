@@ -24,7 +24,11 @@ SCRIPT = textwrap.dedent(
     from repro.launch.steps import build_cell, list_cells
     from repro.launch import hlo_analysis as H
 
-    # one representative (cheap) cell per family
+    # one representative (cheap) cell per family. The shard_map xdev cells
+    # are traced (not compiled) in tests/test_step_program.py — compiling
+    # bert-base at B=2048 under shard_map costs ~9 min on CPU, which would
+    # blow this subprocess's timeout; their collective mechanics are
+    # compile-tested at MLP scale in tests/test_distributed.py.
     cells = [
         ("schnet", "molecule"),
         ("deepfm", "serve_p99"),
@@ -47,7 +51,7 @@ SCRIPT = textwrap.dedent(
     all_cells = list_cells()
     archs = {a for a, _ in all_cells}
     assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
-    assert len(all_cells) == 45, len(all_cells)
+    assert len(all_cells) == 47, len(all_cells)
     print("CELL_LIST_OK")
     """
 )

@@ -69,10 +69,13 @@ def test_hard_negatives_increase_loss():
 
 
 @pytest.mark.parametrize("seed", range(5))
-@pytest.mark.parametrize("cq,cp", [(8, 8), (0, 8), (8, 0), (4, 8), (0, 0)])
+@pytest.mark.parametrize("cq,cp", [(8, 8), (0, 8), (8, 0), (0, 0)])
 def test_production_loss_matches_reference(seed, cq, cp):
     """core.loss.contrastive_step_loss ≡ core.infonce.extended_loss across
-    bank configurations and fill levels (randomized sweep)."""
+    bank configurations and fill levels (randomized sweep). Unequal non-zero
+    (cq, cp) pairs are deliberately absent: their prefix alignment was only
+    sound before a ring wrap, and the production path now rejects them
+    (tests/test_memory_bank.py, tests/test_step_program.py)."""
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 6)
     b, d, h = 4, 8, 2

@@ -3,8 +3,19 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.memory_bank import clear, init_bank, n_valid, ordered, push, push_pair
+from repro.core.memory_bank import (
+    aligned_valid,
+    bank_spec,
+    clear,
+    init_bank,
+    n_valid,
+    ordered,
+    push,
+    push_pair,
+    shard_push,
+)
 
 
 def rows(vals, d=4):
@@ -82,6 +93,91 @@ def test_push_pair_alignment():
     np.testing.assert_array_equal(
         np.asarray(bq.buf[:, 0]) + 10, np.asarray(bp.buf[:, 0])
     )
+
+
+def test_aligned_valid_rejects_unequal_nonzero_capacities():
+    """Regression: with cq != cp (both > 0) the rings stay prefix-aligned
+    only until either wraps — heads advance mod *different* capacities, so
+    after capacity-lcm pushes slot i of M_q holds a query whose positive is
+    NOT slot i of M_p. aligned_valid must refuse instead of silently
+    mislabeling; only a disabled (capacity-0) bank is exempt."""
+    bq, bp = init_bank(4, 4), init_bank(6, 4)
+    # wrap BOTH rings (7 lockstep pushes > both capacities): the old prefix
+    # assumption is now wrong for every slot, not just the tail
+    for i in range(7):
+        bq, bp = push_pair(bq, bp, rows([10 + i]), rows([20 + i]))
+    with pytest.raises(ValueError, match="equal capacities"):
+        aligned_valid(bq, bp)
+    # disabled banks short-circuit to "no aligned rows"
+    assert aligned_valid(init_bank(0, 4), bp).shape == (0,)
+    assert not bool(aligned_valid(bq, init_bank(0, 4)).any())
+
+
+def test_equal_capacity_alignment_survives_ring_wrap():
+    """Positive control for the unequal-capacity rejection: equal-capacity
+    lockstep rings keep slot i of M_q paired with slot i of M_p through
+    multiple wraps."""
+    bq, bp = init_bank(4, 4), init_bank(4, 4)
+    for i in range(11):  # wraps the rings twice, ends mid-ring
+        bq, bp = push_pair(bq, bp, rows([10 + i]), rows([20 + i]))
+        filled = np.asarray(bq.valid)
+        np.testing.assert_array_equal(
+            np.asarray(bq.buf[filled, 0]) + 10, np.asarray(bp.buf[filled, 0])
+        )
+        assert bool(aligned_valid(bq, bp).all()) == (i >= 3)
+
+
+def test_shard_push_union_matches_replicated_push():
+    """Sharded banks are the replicated ring, partitioned: after any push
+    sequence, concatenating the D shard-local banks (shard-major) must be
+    bit-identical to the replicated bank, and every shard carries the same
+    global head."""
+    cap, n_shards, d = 12, 3, 4
+    rng = np.random.default_rng(0)
+    glob = init_bank(cap, d)
+    shards = [init_bank(cap // n_shards, d) for _ in range(n_shards)]
+    for step, n in enumerate([5, 3, 7, 4, 6]):  # wraps the ring repeatedly
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        glob = push(glob, x, step)
+        shards = [
+            shard_push(s, x, step, shard_index=i, num_shards=n_shards)
+            for i, s in enumerate(shards)
+        ]
+        for s in shards:
+            assert int(s.head) == int(glob.head)
+
+    def cat(field):
+        return np.concatenate([np.asarray(getattr(s, field)) for s in shards])
+
+    np.testing.assert_array_equal(cat("buf"), np.asarray(glob.buf))
+    np.testing.assert_array_equal(cat("valid"), np.asarray(glob.valid))
+    np.testing.assert_array_equal(cat("age"), np.asarray(glob.age))
+
+
+def test_shard_push_oversized_keeps_newest_rows():
+    """n > global capacity: last-write-wins pre-slicing works through the
+    shard-local scatter exactly as it does for the replicated push."""
+    cap, n_shards, d = 6, 2, 4
+    glob = push(init_bank(cap, d), rows(list(range(1, 16)), d), step=3)
+    shards = [
+        shard_push(init_bank(cap // n_shards, d), rows(list(range(1, 16)), d),
+                   step=3, shard_index=i, num_shards=n_shards)
+        for i in range(n_shards)
+    ]
+    got = np.concatenate([np.asarray(s.buf) for s in shards])
+    np.testing.assert_array_equal(got, np.asarray(glob.buf))
+    assert all(int(s.head) == int(glob.head) for s in shards)
+
+
+def test_bank_spec_shapes():
+    from jax.sharding import PartitionSpec as P
+
+    spec = bank_spec(("pod", "data"))
+    assert spec.buf == P(("pod", "data"))
+    assert spec.valid == P(("pod", "data")) and spec.age == P(("pod", "data"))
+    assert spec.head == P()
+    assert bank_spec(None).buf == P()
+    assert bank_spec("data").buf == P("data")
 
 
 def test_zero_capacity_bank_noop():

@@ -63,6 +63,65 @@ def test_trainer_resumes_from_checkpoint(tmp_path):
     assert report2.steps_run < 9
 
 
+def test_trainer_bank_roundtrip_is_bit_identical(tmp_path):
+    """ContrastiveState checkpoint round-trip: saving mid-warm-up (banks
+    partially filled, ring heads mid-buffer) and restoring must reproduce
+    the uninterrupted bank trajectory bit-for-bit — BankState.head/valid/age
+    are restored purely by template dtype (int32/bool/int32), so any dtype
+    or layout drift in the checkpoint path would desynchronize the rings."""
+    import sys
+
+    sys.path.insert(0, "tests")
+    from helpers import make_batch, make_mlp_encoder
+
+    from repro.core import ContrastiveConfig, build_step_program, init_state
+    from repro.optim import chain, clip_by_global_norm, sgd
+
+    enc = make_mlp_encoder()
+    # bank_size 24 and B=8 x K=2: after 3 steps the banks hold 24 of 24 rows
+    # with head mid-ring; the interruption at step 2 lands mid-warm-up
+    cfg = ContrastiveConfig(method="contaccum", accumulation_steps=2, bank_size=24)
+    tx = chain(clip_by_global_norm(2.0), sgd(0.1))
+    update = jax.jit(build_step_program(enc, tx, cfg).update)
+    batches = {i: make_batch(jax.random.PRNGKey(40 + i), 8) for i in range(6)}
+
+    def trainer(total_steps, ckpt_dir):
+        return Trainer(
+            TrainerConfig(total_steps=total_steps, checkpoint_dir=ckpt_dir,
+                          checkpoint_every=2, log_every=100),
+            update,
+            next_batch=lambda i: batches[i],
+        )
+
+    state0 = init_state(jax.random.PRNGKey(0), enc, tx, cfg)
+
+    # uninterrupted reference: 6 steps straight through, no checkpoint dir
+    ref = state0
+    for i in range(6):
+        ref, _ = update(ref, batches[i])
+
+    # interrupted run: stop after 3 steps (checkpoint at step 2 mid-warm-up),
+    # then a fresh trainer restores and continues to 6
+    a = str(tmp_path / "roundtrip")
+    trainer(3, a).run(state0)
+    resumed, report = trainer(6, a).run(state0)
+    assert report.steps_run < 6  # proves it resumed, not re-ran
+
+    assert int(resumed.step) == int(ref.step) == 6
+    for bank in ("bank_q", "bank_p"):
+        got, want = getattr(resumed, bank), getattr(ref, bank)
+        np.testing.assert_array_equal(np.asarray(got.buf), np.asarray(want.buf),
+                                      err_msg=f"{bank}.buf")
+        np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(want.valid))
+        np.testing.assert_array_equal(np.asarray(got.age), np.asarray(want.age))
+        assert got.valid.dtype == want.valid.dtype == np.bool_
+        assert got.head.dtype == want.head.dtype == jnp.int32
+        assert int(got.head) == int(want.head), bank
+    for a_, b_ in zip(jax.tree_util.tree_leaves(resumed.params),
+                      jax.tree_util.tree_leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a_), np.asarray(b_))
+
+
 def test_trainer_restores_after_injected_fault(tmp_path):
     step_fn = lambda s, b: (s + b, {"loss": 1.0})
     failures = {"at": 6, "done": False}
