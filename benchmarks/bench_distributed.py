@@ -88,7 +88,7 @@ SCRIPT = textwrap.dedent(
 
         nq = state.bank_q.buf.shape[0]
         np_rows = state.bank_p.buf.shape[0]
-        itemsize = jnp.dtype(cfg.bank_dtype).itemsize
+        itemsize = jnp.dtype(cfg.resolved_bank_dtype()).itemsize
         per_dev = (nq + np_rows) * enc.rep_dim * itemsize
         if shard_banks:
             per_dev //= D

@@ -1,14 +1,19 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-report. Prints each table and a final ``name,value`` CSV.
+report. Prints each table and a final ``name,value`` CSV, and writes one
+machine-readable ``BENCH_<suite>.json`` artifact per suite (the perf
+trajectory across PRs is reconstructed from these).
 
   PYTHONPATH=src python -m benchmarks.run           # full
   PYTHONPATH=src python -m benchmarks.run --quick   # reduced steps
   PYTHONPATH=src python -m benchmarks.run --only fig4
+  PYTHONPATH=src python -m benchmarks.run --only precision --out-dir bench_out
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 from benchmarks import (
@@ -17,6 +22,7 @@ from benchmarks import (
     bench_fig4,
     bench_fig5,
     bench_fused_infonce,
+    bench_precision,
     bench_regimes,
     bench_roofline,
     bench_table1,
@@ -33,13 +39,34 @@ SUITES = {
     "roofline": bench_roofline.run,
     "fused_infonce": bench_fused_infonce.run,
     "distributed": bench_distributed.run,
+    "precision": bench_precision.run,
 }
+
+
+def write_artifact(out_dir: str, suite: str, rows, elapsed_s: float, quick: bool) -> str:
+    """One BENCH_<suite>.json per suite: everything a trend dashboard needs
+    to diff runs — suite name, flags, wall time, and the (name, value) rows
+    in run order."""
+    payload = {
+        "suite": suite,
+        "quick": quick,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": k, "value": v} for k, v in rows],
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=sorted(SUITES))
+    ap.add_argument("--out-dir", default=".",
+                    help="where the BENCH_<suite>.json artifacts are written")
     args = ap.parse_args(argv)
 
     names = [args.only] if args.only else list(SUITES)
@@ -47,7 +74,9 @@ def main(argv=None) -> None:
     for name in names:
         t0 = time.time()
         rows = SUITES[name](quick=args.quick) or []
-        print(f"[{name}] done in {time.time()-t0:.1f}s")
+        dt = time.time() - t0
+        path = write_artifact(args.out_dir, name, rows, dt, args.quick)
+        print(f"[{name}] done in {dt:.1f}s -> {path}")
         all_rows += rows
 
     print("\n== CSV ==")

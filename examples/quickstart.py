@@ -33,13 +33,16 @@ def batches(corpus, loader):
         )
 
 
-def main():
+def main(warm_steps: int = 100, steps: int = 100, n_passages: int = 1024):
+    """Defaults reproduce the original walkthrough; the examples smoke test
+    (tests/test_examples.py) shrinks the step counts so the drivers cannot
+    silently rot against the StepProgram API."""
     # model: two small BERT towers (query + passage)
     encoder = make_bert_dual_encoder(BertConfig(
         name="bert-mini", n_layers=2, d_model=64, n_heads=4, d_ff=128,
         vocab_size=2000, max_position=64, dtype=jnp.float32,
     ))
-    corpus = SyntheticRetrievalCorpus(n_passages=1024, vocab_size=2000,
+    corpus = SyntheticRetrievalCorpus(n_passages=n_passages, vocab_size=2000,
                                       q_len=16, p_len=32)
     loader = ShardedLoader(corpus.n_passages, global_batch=32, seed=0)
     stream = batches(corpus, loader)
@@ -50,7 +53,7 @@ def main():
     warm_update = jax.jit(make_update_fn(encoder, warm_tx, warm_cfg),
                           donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(0), encoder, warm_tx, warm_cfg)
-    for step in range(100):
+    for step in range(warm_steps):
         state, m = warm_update(state, next(stream))
     print(f"warm-up done: loss {float(m.loss):.3f}")
 
@@ -71,7 +74,7 @@ def main():
     update = jax.jit(make_update_fn(encoder, tx, cfg), donate_argnums=(0,))
     state = init_state(jax.random.PRNGKey(1), encoder, tx, cfg,
                        params=state.params)
-    for step in range(100):
+    for step in range(steps):
         state, m = update(state, next(stream))
         if step % 20 == 0:
             print(f"step {step:3d}  loss {float(m.loss):.3f}  "

@@ -26,6 +26,7 @@ from repro.core.methods import (
     method_needs_mesh,
     method_uses_banks,
 )
+from repro.core.precision import PRECISION_PRESETS
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
@@ -65,6 +66,13 @@ def main(argv=None):
                     help="loss backend (core/loss.py): 'dense' materializes "
                          "the logits block, 'fused' streams it through the "
                          "blocked Pallas kernel (interpret mode on CPU)")
+    ap.add_argument("--precision", default=None,
+                    choices=sorted(PRECISION_PRESETS),
+                    help="PrecisionPolicy preset (core/precision.py): fp32 "
+                         "reference, bf16 (bf16 compute copies, fp32 "
+                         "masters), or bf16_banks (bf16 compute + bf16 bank "
+                         "rings). Default keeps the preset's own dtypes "
+                         "(the 'paper' preset is already bf16-compute)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--warmup-steps", type=int, default=None,
                     help="in-batch warm-up steps for from-scratch presets "
@@ -86,9 +94,14 @@ def main(argv=None):
         accumulation_steps=k if backprop != "direct" else 1,
         bank_size=args.bank if method_uses_banks(args.method) else 0,
         loss_impl=args.loss_impl,
+        # --precision unset keeps the preset's own dtypes: the cfg policy
+        # follows the preset's compute dtype so the loss / rep-cache don't
+        # upcast the paper preset's bf16 reps back to fp32
+        precision=args.precision
+        or ("bf16" if bert.dtype == jnp.bfloat16 else "fp32"),
         temperature=1.0, grad_clip_norm=2.0,
     )
-    enc = make_bert_dual_encoder(bert)
+    enc = make_bert_dual_encoder(bert, precision=args.precision)
     tx = chain(
         clip_by_global_norm(cfg.grad_clip_norm),
         adamw(linear_warmup_linear_decay(

@@ -37,6 +37,42 @@ DPR_SHAPES = {
             "loss_impl": "fused",
         },
     ),
+    # the paper's geometry under the full bf16 PrecisionPolicy
+    # (core/precision.py 'bf16_banks'): bf16 tower compute + bf16 bank rings
+    # (half the persistent bank HBM of paper_batch), fp32 masters and softmax
+    # statistics — trajectory within documented tolerance of fp32
+    # (tests/test_precision.py)
+    "paper_batch_bf16": ShapeCell(
+        "paper_batch_bf16",
+        "contrastive",
+        {
+            "global_batch": 128,
+            "accum_steps": 1,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "precision": "bf16_banks",
+        },
+    ),
+    # the paper's full K=16 accumulation geometry, bf16 banks + the fused
+    # Pallas loss backend: the extended logits block streams through VMEM in
+    # bf16 tiles, bank rings cost (2*2048*768*2)/1 bytes per device
+    "contaccum_bf16": ShapeCell(
+        "contaccum_bf16",
+        "contrastive",
+        {
+            "method": "contaccum",
+            "global_batch": 128,
+            "accum_steps": 16,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "precision": "bf16_banks",
+            "loss_impl": "fused",
+        },
+    ),
     # pod-scale: 16k pairs/step with 32k-deep dual banks
     "contrastive_16k": ShapeCell(
         "contrastive_16k",

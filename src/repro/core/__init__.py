@@ -16,6 +16,13 @@ from repro.core.loss import (
     resolve_loss_backend,
 )
 from repro.core.dist import DistCtx, get_shard_map
+from repro.core.precision import (
+    PRECISION_PRESETS,
+    PrecisionPolicy,
+    apply_compute_dtype,
+    bank_bytes_per_device,
+    resolve_precision,
+)
 from repro.core.step_program import (
     COMPOSITIONS,
     SOURCES,
@@ -59,6 +66,8 @@ __all__ = [
     "LossBackend", "DenseLossBackend", "FusedLossBackend", "LOSS_BACKENDS",
     "resolve_loss_backend",
     "DistCtx", "get_shard_map",
+    "PRECISION_PRESETS", "PrecisionPolicy", "apply_compute_dtype",
+    "bank_bytes_per_device", "resolve_precision",
     "ContrastiveConfig", "ContrastiveState", "DualEncoder", "RetrievalBatch",
     "StepMetrics", "chunk_tree", "flatten_hard",
     "COMPOSITIONS", "SOURCES", "STRATEGIES",

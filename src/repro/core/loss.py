@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from repro.core.dist import DistCtx
 from repro.core.infonce import NEG_INF
 from repro.core.memory_bank import BankState, aligned_valid, columns_view
+from repro.core.precision import PrecisionPolicy, resolve_precision
 
 
 class LossAux(NamedTuple):
@@ -100,7 +101,14 @@ class ExtraRows(NamedTuple):
 # --------------------------------------------------------------------------
 class LossBackend(Protocol):
     """Computes the per-row softmax statistics of one row block against the
-    assembled column set. Implementations must agree to fp32 tolerance."""
+    assembled column set. Implementations must agree to fp32 tolerance.
+
+    Precision contract: ``q_rows``/``p_all`` may arrive in any float dtype
+    (the PrecisionPolicy's compute dtype — bf16 under the ``bf16``/
+    ``bf16_banks`` presets); every softmax statistic (logits, lse, pos,
+    accuracy indicator) is computed and returned in fp32 (the policy's
+    ``accum_dtype``) regardless, so low-precision inputs never degrade the
+    statistics themselves (tests/test_precision.py pins this)."""
 
     name: str
 
@@ -156,9 +164,11 @@ class FusedLossBackend:
             if self.interpret is None
             else self.interpret
         )
+        # q/p may be bf16 (compute dtype); the kernel casts block loads to a
+        # common dtype and keeps all statistics + VJP accumulation in fp32
         lse, pos, amax = fused_infonce_stats(
             q_rows,
-            p_all.astype(q_rows.dtype),
+            p_all,
             labels.astype(jnp.int32),
             col_mask,
             1.0 / float(temperature),
@@ -205,15 +215,27 @@ def contrastive_loss(
     temperature: float = 1.0,
     ctx: Optional[DistCtx] = None,
     backend: Union[None, str, LossBackend] = None,
+    precision: Union[None, str, PrecisionPolicy] = None,
 ) -> tuple[jnp.ndarray, LossAux]:
     """Returns (loss_dev, aux). ``loss_dev`` is this device's share of the
     global loss: psum(loss_dev) == global loss; in single-device mode
     loss_dev == global loss. Differentiate loss_dev, then psum the grads.
     ``backend`` selects how the softmax statistics are computed (None ->
     dense einsum; 'fused' -> the blocked Pallas kernel; or an instance).
+    ``precision`` (a PrecisionPolicy or preset name) is the single place the
+    loss casts: the local representations are cast to ``compute_dtype`` here,
+    and the extra column/row blocks (bank buffers, possibly in a narrower
+    ``bank_dtype``) are cast to match — no call site needs ad-hoc ``.astype``.
+    None keeps the incoming dtypes (fp32 legacy behavior, bit-identical).
+    Softmax statistics and the row reductions stay fp32 either way.
     """
     ctx = ctx or DistCtx()
     be = resolve_loss_backend(backend)
+    if precision is not None:
+        pol = resolve_precision(precision)
+        q_local = pol.cast_compute(q_local)
+        p_pos_local = pol.cast_compute(p_pos_local)
+        p_hard_local = pol.cast_compute(p_hard_local)
     b_local = q_local.shape[0]
 
     # --- columns (gathered across DP axes) ---
@@ -347,6 +369,7 @@ def contrastive_step_loss(
     temperature: float = 1.0,
     ctx: Optional[DistCtx] = None,
     backend: Union[None, str, LossBackend] = None,
+    precision: Union[None, str, PrecisionPolicy] = None,
 ) -> tuple[jnp.ndarray, LossAux]:
     """Legacy bank-taking entry point: dual banks -> extras -> loss."""
     return contrastive_loss(
@@ -358,4 +381,5 @@ def contrastive_step_loss(
         temperature=temperature,
         ctx=ctx,
         backend=backend,
+        precision=precision,
     )

@@ -20,6 +20,15 @@ Two distribution modes (core/step_program.py, ``cfg.shard_banks``):
     reconstructs the replicated ring exactly (``shard_push`` /
     ``shard_push_pair``; ``bank_spec`` gives the PartitionSpecs). Per-device
     bank HBM shrinks by 1/D at identical math.
+
+Precision: the ring buffers are stored in the PrecisionPolicy's
+``bank_dtype`` (core/precision.py; ``init_bank``'s dtype is plumbed from
+``ContrastiveConfig.resolved_bank_dtype()``). All casts are centralized —
+pushes cast incoming rows to the buffer dtype here (``push``/``shard_push``),
+and the loss casts buffer reads back to its compute dtype
+(core/loss.py ``contrastive_loss``); no call site carries ad-hoc ``.astype``.
+With ``bank_dtype=bf16`` the persistent per-device bank bytes halve again on
+top of sharding: (N_q + N_p) * d * 2 / D.
 """
 
 from __future__ import annotations

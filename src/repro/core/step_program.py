@@ -42,6 +42,19 @@ blocked online-softmax Pallas kernel) — every source x strategy composition
 runs on either backend, gradient-exact to fp32 tolerance
 (tests/test_fused_infonce.py).
 
+Orthogonal to everything above, ``cfg.precision`` selects the
+**PrecisionPolicy** (core/precision.py): presets ``fp32`` (default,
+bit-identical to the historical behavior), ``bf16`` (bf16 encoder compute +
+representations, fp32 masters/banks/statistics) and ``bf16_banks`` (bf16
+compute *and* bf16 bank buffers). The policy is threaded through every
+source x strategy composition: the loss casts representations and bank
+blocks to ``compute_dtype`` in one place, the rep_cache representation store
+is kept in ``compute_dtype``, bank rings are allocated in ``bank_dtype``,
+and softmax statistics / metric reductions / gradient accumulation stay in
+``accum_dtype`` (fp32 in every preset). bf16 trajectories track the fp32
+reference within documented tolerance for the full matrix
+(tests/test_precision.py).
+
 Also orthogonal, ``cfg.shard_banks`` picks the bank **distribution mode**
 under shard_map: replicated (default — every device carries the full rings
 and pushes the gathered global rows) or sharded (each device owns a
@@ -81,6 +94,7 @@ from repro.core.memory_bank import (
     shard_push,
     shard_push_pair,
 )
+from repro.core.precision import resolve_precision
 from repro.core.types import (
     ContrastiveConfig,
     ContrastiveState,
@@ -173,7 +187,8 @@ class InBatchNegatives:
 
     def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         return contrastive_loss(
-            q, pp, ph, temperature=cfg.temperature, ctx=ctx, backend=backend
+            q, pp, ph, temperature=cfg.temperature, ctx=ctx, backend=backend,
+            precision=cfg.resolved_precision(),
         )
 
     def push(self, carry, aux, step, *, cfg, ctx):
@@ -256,6 +271,7 @@ class DualBankNegatives:
             temperature=cfg.temperature,
             ctx=ctx,
             backend=backend,
+            precision=cfg.resolved_precision(),
         )
 
     def push(self, carry, aux, step, *, cfg, ctx):
@@ -298,6 +314,7 @@ class PassageBankNegatives(DualBankNegatives):
             temperature=cfg.temperature,
             ctx=ctx,
             backend=backend,
+            precision=cfg.resolved_precision(),
         )
 
     def push(self, carry, aux, step, *, cfg, ctx):
@@ -460,7 +477,12 @@ class RepCacheVJP:
             return None, (q, pp, ph)
 
         _, (qs, pps, phs) = jax.lax.scan(fwd, None, chunks)
-        qs, pps, phs = map(jax.lax.stop_gradient, (qs, pps, phs))
+        # the cached representation store lives in the policy's compute dtype
+        # (bf16 halves the (B_g + banks, d) cache this strategy carries)
+        pol = cfg.resolved_precision()
+        qs, pps, phs = (
+            pol.cast_compute(jax.lax.stop_gradient(x)) for x in (qs, pps, phs)
+        )
 
         def merge(x):  # (K, local, d) -> (K*local, d)
             return x.reshape((-1, x.shape[-1]))
@@ -495,8 +517,14 @@ class RepCacheVJP:
                 ph = jnp.zeros((0, q.shape[-1]), q.dtype) if ph is None else ph
                 return (q, pp, ph)
 
-            _, vjp_fn = jax.vjp(enc, params)
-            (g,) = vjp_fn((gq_k, gpp_k, gph_k))
+            outs, vjp_fn = jax.vjp(enc, params)
+            # cached cotangents are in compute dtype; the encoder's native
+            # output dtype may differ (fp32 towers under a bf16 policy) —
+            # seed the VJP in the primal dtype it expects
+            seeds = tuple(
+                g.astype(o.dtype) for g, o in zip((gq_k, gpp_k, gph_k), outs)
+            )
+            (g,) = vjp_fn(seeds)
             return tree_add(grads_acc, g), None
 
         grads, _ = jax.lax.scan(
@@ -653,6 +681,7 @@ def build_step_program(
     source.validate(cfg)
     strategy.validate(cfg)
     resolve_loss_backend(cfg.loss_impl)  # fail fast on unknown loss_impl
+    resolve_precision(cfg.precision)     # fail fast on unknown precision
     ctx = DistCtx(cfg.dp_axis)
 
     def update(state: ContrastiveState, batch: RetrievalBatch):
@@ -679,16 +708,18 @@ def init_state(
     bank_dim: Optional[int] = None,
 ) -> ContrastiveState:
     """Initial train state with the bank capacities the cfg's negative
-    source asks for."""
+    source asks for; bank rings are allocated in the precision policy's
+    ``bank_dtype`` (or the explicit ``cfg.bank_dtype`` override)."""
     if params is None:
         params = encoder.init(rng)
     source, _ = resolve_composition(cfg)
     nq, np_ = source.bank_sizes(cfg)
     d = bank_dim or encoder.rep_dim
+    bank_dtype = cfg.resolved_bank_dtype()
     return ContrastiveState(
         step=jnp.zeros((), jnp.int32),
         params=params,
         opt_state=tx.init(params),
-        bank_q=init_bank(nq, d, cfg.bank_dtype),
-        bank_p=init_bank(np_, d, cfg.bank_dtype),
+        bank_q=init_bank(nq, d, bank_dtype),
+        bank_p=init_bank(np_, d, bank_dtype),
     )

@@ -63,6 +63,16 @@ class ContrastiveConfig:
         the (M, N) logits block; 'fused' streams it through the blocked
         online-softmax Pallas kernel (gradient-exact, never materialized).
         Composes with every negatives/backprop setting.
+    precision: a PrecisionPolicy or preset name ('fp32' | 'bf16' |
+        'bf16_banks', core/precision.py) governing every dtype of the update:
+        encoder compute copies, representations (incl. the rep_cache store),
+        bank buffers and the loss-backend inputs. Softmax statistics, metric
+        reductions and gradient accumulation stay in ``accum_dtype`` (fp32 in
+        every preset) regardless. 'fp32' (default) is bit-identical to the
+        historical all-fp32 behavior; orthogonal to negatives/backprop,
+        loss_impl and shard_banks.
+    bank_dtype: explicit memory-bank buffer dtype override; None (default)
+        defers to ``precision`` (the normal path — set the policy, not this).
     shard_banks: shard the memory banks across the DP mesh instead of
         replicating them. Each device owns a ``bank_size / D`` contiguous
         block of ring slots (memory_bank.shard_push); the loss gathers the
@@ -85,14 +95,30 @@ class ContrastiveConfig:
     use_query_bank: bool = True
     reset_banks_each_update: bool = False
     grad_clip_norm: float = 2.0
-    bank_dtype: Any = jnp.float32
+    bank_dtype: Any = None
     loss_impl: str = "dense"
+    # PrecisionPolicy preset name or instance (core/precision.py); 'fp32'
+    # reproduces the historical all-fp32 behavior bit-for-bit.
+    precision: Any = "fp32"
     # Cross-device negatives: name(s) of mesh axes to all-gather representations
     # over; None means single-device semantics.
     dp_axis: Optional[Any] = None
     # Shard the memory banks over dp_axis (capacity/D rows per device)
     # instead of replicating them; see the class docstring.
     shard_banks: bool = False
+
+    def resolved_precision(self):
+        """The PrecisionPolicy this config runs under (presets resolved)."""
+        from repro.core.precision import resolve_precision
+
+        return resolve_precision(self.precision)
+
+    def resolved_bank_dtype(self):
+        """Bank buffer dtype: explicit ``bank_dtype`` override, else the
+        precision policy's ``bank_dtype``."""
+        if self.bank_dtype is not None:
+            return self.bank_dtype
+        return self.resolved_precision().bank_dtype
 
     def resolved_bank_sizes(self):
         nq = self.bank_size if self.bank_size_q is None else self.bank_size_q

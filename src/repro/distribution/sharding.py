@@ -105,7 +105,12 @@ def contrastive_state_spec(dp: Tuple[str, ...], shard_banks: bool):
     """ContrastiveState-shaped PartitionSpec prefix-tree for shard_map
     in/out_specs on the StepProgram update: params/optimizer replicated
     (pure DP), banks per ``bank_rules``. Pair with a batch spec of
-    ``P(dp)`` on every RetrievalBatch leaf."""
+    ``P(dp)`` on every RetrievalBatch leaf.
+
+    Specs are dtype-free, so the same tree serves every PrecisionPolicy
+    (core/precision.py): the bank leaves' dtype flows from the state built
+    by ``init_state`` (bf16 rings under 'bf16_banks' shard exactly like fp32
+    ones — the two memory levers compose to bank bytes / (2·D))."""
     from repro.core.memory_bank import bank_spec
     from repro.core.types import ContrastiveState
 

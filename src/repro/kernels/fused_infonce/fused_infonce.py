@@ -26,6 +26,16 @@ last column step. dp uses the transposed grid (N/bn, M/bm).
 MXU alignment: block_m/block_n default 128 (fp32 lane width 8x128; the matmul
 tiles are 128x128). d (the contraction dim) is loaded whole per tile —
 rep_dim <= 8192 fits VMEM comfortably (128 x 8192 x 4B = 4 MiB per operand).
+
+Mixed precision (core/precision.py): q/p block loads may be bf16 (the
+policy's compute dtype — halves the VMEM per operand tile and feeds the MXU
+its native input width). Mismatched q/p dtypes are reconciled to a common
+compute dtype at the entry points below; every tile matmul accumulates in
+fp32 (``preferred_element_type``), the online-softmax scratch, lse/pos/amax
+outputs and backward coefficients are fp32 throughout (the policy's
+``accum_dtype``), and dQ/dP are accumulated in fp32 before a final cast back
+to the input dtype — low-precision inputs never degrade the statistics or
+the VJP accumulation.
 """
 
 from __future__ import annotations
@@ -106,16 +116,20 @@ def _blocking(m: int, n: int, block_m: int, block_n: int):
 
 def _prep_operands(q, p, labels, col_valid, m_pad, n_pad):
     """Pad to the block grid: padded rows are zeros (outputs sliced off),
-    padded columns are marked invalid (masked to NEG_INF in-kernel)."""
+    padded columns are marked invalid (masked to NEG_INF in-kernel). q/p are
+    reconciled to a common compute dtype (dtype-aware block loads: bf16
+    stays bf16, mixed bf16/fp32 inputs promote to fp32) — the in-kernel
+    matmuls accumulate in fp32 regardless."""
     n = p.shape[0]
+    ct = jnp.result_type(q.dtype, p.dtype)
     valid = (
         jnp.ones((n,), jnp.int32)
         if col_valid is None
         else col_valid.astype(jnp.int32)
     )
     return (
-        _pad_axis0(q, m_pad),
-        _pad_axis0(p, n_pad),
+        _pad_axis0(q.astype(ct), m_pad),
+        _pad_axis0(p.astype(ct), n_pad),
         _pad_axis0(labels.astype(jnp.int32), m_pad),
         _pad_axis0(valid, n_pad),
     )
@@ -252,10 +266,11 @@ def fused_infonce_bwd(
     bm, bn, m_pad, n_pad = _blocking(m, n, block_m, block_n)
     q, p, labels, valid = _prep_operands(q, p, labels, col_valid, m_pad, n_pad)
     # padded rows carry zero cotangents and lse=0, so their uniform
-    # exp(0 - 0) probabilities never reach dQ/dP
-    lse = _pad_axis0(lse, m_pad)
-    g_lse = _pad_axis0(g_lse, m_pad)
-    g_pos = _pad_axis0(g_pos, m_pad)
+    # exp(0 - 0) probabilities never reach dQ/dP. Statistics and cotangents
+    # are fp32 in-kernel whatever dtype q/p arrive in (accum_dtype contract).
+    lse = _pad_axis0(lse.astype(jnp.float32), m_pad)
+    g_lse = _pad_axis0(g_lse.astype(jnp.float32), m_pad)
+    g_pos = _pad_axis0(g_pos.astype(jnp.float32), m_pad)
     grid_q = (m_pad // bm, n_pad // bn)
 
     dq = pl.pallas_call(

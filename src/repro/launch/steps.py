@@ -35,6 +35,7 @@ from repro.configs import get_arch, list_archs
 from repro.configs.base import ArchSpec, ShapeCell
 from repro.core.dist import get_shard_map
 from repro.core.methods import build_step_program, init_state
+from repro.core.precision import bank_bytes_per_device, resolve_precision
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.distribution.sharding import (
     BERT_RULES,
@@ -548,11 +549,15 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     else:
         dp = dp_axes(mesh)
         rules = BERT_RULES
-    # §Perf iteration B2: bf16 activations (fp32 master weights; the loss
-    # softmax stays fp32 inside core/infonce) — halves tower HBM traffic,
-    # which dominates after B1.
-    if p.get("bf16_compute", True):
-        bcfg = dataclasses.replace(bcfg, dtype=jnp.bfloat16)
+    # §Perf iteration B2, generalized into a PrecisionPolicy
+    # (core/precision.py): cells select a preset via "precision"; the legacy
+    # "bf16_compute" flag (default True) maps to the 'bf16' preset — bf16
+    # activations with fp32 master weights, banks and softmax statistics.
+    # 'bf16_banks' additionally stores the bank rings in bf16.
+    policy = resolve_precision(
+        p.get("precision", "bf16" if p.get("bf16_compute", True) else "fp32")
+    )
+    bcfg = bcfg.with_precision(policy)
     ccfg = ContrastiveConfig(
         # any registered source x strategy composition; cells default to the
         # paper's contaccum but can select e.g. contcache / prebatch_cache
@@ -564,6 +569,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
         # 'fused' streams the extended logits block through the Pallas
         # online-softmax kernel (compiled on TPU, interpreter elsewhere)
         loss_impl=p.get("loss_impl", "dense"),
+        precision=policy,
         temperature=1.0,
         # xdev: explicit collectives over the named DP axes (shard_map).
         # Otherwise dp_axis=None: single-program semantics; GSPMD derives
@@ -609,9 +615,9 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     tokens = b * (ql + pl * (1 + h))
     nq, np_ = program.source.bank_sizes(ccfg)
     bank_shards = _axes_size(mesh, dp) if shard_banks else 1
-    bank_bytes_dev = (
-        (nq + np_) * bcfg.d_model * jnp.dtype(ccfg.bank_dtype).itemsize
-    ) // bank_shards
+    bank_bytes_dev = bank_bytes_per_device(
+        nq, np_, bcfg.d_model, policy, shards=bank_shards
+    )
     if program.strategy.name == "rep_cache":
         # one full-batch similarity matrix regardless of K
         rows, cols, n_mats = b + nq, b * (1 + h) + np_, 1
@@ -631,6 +637,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "negatives": program.source.name,
             "backprop": program.strategy.name,
             "loss_impl": ccfg.loss_impl,
+            "precision": policy.name,
             "xdev": xdev,
             "shard_banks": shard_banks,
             "bank_shards": bank_shards,

@@ -35,6 +35,7 @@ from repro.core.methods import (
     method_needs_mesh,
     method_uses_banks,
 )
+from repro.core.precision import PRECISION_PRESETS
 from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
@@ -67,6 +68,12 @@ def main(argv=None):
     ap.add_argument("--loss-impl", default="dense", choices=["dense", "fused"],
                     help="loss backend (core/loss.py): dense einsum or the "
                          "blocked Pallas online-softmax kernel")
+    ap.add_argument("--precision", default="fp32",
+                    choices=sorted(PRECISION_PRESETS),
+                    help="PrecisionPolicy preset (core/precision.py): fp32 "
+                         "(reference), bf16 (bf16 compute, fp32 masters/"
+                         "banks), bf16_banks (bf16 compute AND bf16 bank "
+                         "buffers — halves persistent bank bytes)")
     ap.add_argument("--total-batch", type=int, default=64)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--bank", type=int, default=256)
@@ -110,12 +117,13 @@ def main(argv=None):
         accumulation_steps=k if backprop != "direct" else 1,
         bank_size=bank,
         loss_impl=args.loss_impl,
+        precision=args.precision,
         temperature=1.0,
         grad_clip_norm=2.0,
         dp_axis="data" if dp else None,
         shard_banks=bool(args.shard_banks and dp and bank),
     )
-    enc = make_bert_dual_encoder(tiny_bert())
+    enc = make_bert_dual_encoder(tiny_bert(), precision=args.precision)
     tx = chain(
         clip_by_global_norm(cfg.grad_clip_norm),
         adamw(linear_warmup_linear_decay(args.lr, args.steps // 10, args.steps)),

@@ -36,6 +36,22 @@ class BertConfig:
     def dh(self) -> int:
         return self.d_model // self.n_heads
 
+    def with_precision(self, policy) -> "BertConfig":
+        """Bind a PrecisionPolicy (core/precision.py; instance or preset
+        name): params are *stored* in ``param_dtype`` (fp32 masters in every
+        preset) and cast to ``compute_dtype`` at application — ``dtype``
+        drives every activation matmul below, and layer_norm keeps its fp32
+        internals (models/layers.py), matching the policy's fp32
+        ``accum_dtype`` for normalization statistics."""
+        import dataclasses as _dc
+
+        from repro.core.precision import resolve_precision
+
+        policy = resolve_precision(policy)
+        return _dc.replace(
+            self, dtype=policy.compute_dtype, param_dtype=policy.param_dtype
+        )
+
     def param_count(self) -> int:
         d = self.d_model
         per_layer = 4 * d * d + 4 * d + 2 * d * self.d_ff + self.d_ff + d + 4 * d

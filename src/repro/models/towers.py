@@ -13,6 +13,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import apply_compute_dtype
 from repro.core.types import DualEncoder
 from repro.models.bert import BertConfig, bert_encode, init_bert
 from repro.models.lm import LMConfig, encode_pooled, init_lm
@@ -25,7 +26,16 @@ def _as_tokens(batch):
     return batch, None
 
 
-def make_bert_dual_encoder(cfg: BertConfig, *, shared: bool = False) -> DualEncoder:
+def make_bert_dual_encoder(
+    cfg: BertConfig, *, shared: bool = False, precision=None
+) -> DualEncoder:
+    """``precision`` (a PrecisionPolicy or preset name, core/precision.py)
+    rebinds the towers' dtypes via ``BertConfig.with_precision``: stored
+    params in ``param_dtype`` (fp32 masters), activations and the emitted
+    [CLS] representations in ``compute_dtype``. None keeps cfg's dtypes."""
+    if precision is not None:
+        cfg = cfg.with_precision(precision)
+
     def init(rng):
         kq, kp = jax.random.split(rng)
         q = init_bert(kq, cfg)
@@ -48,9 +58,14 @@ def make_bert_dual_encoder(cfg: BertConfig, *, shared: bool = False) -> DualEnco
     )
 
 
-def make_lm_dual_encoder(cfg: LMConfig, *, shared: bool = True) -> DualEncoder:
+def make_lm_dual_encoder(
+    cfg: LMConfig, *, shared: bool = True, precision=None
+) -> DualEncoder:
     """LM-as-retriever: one shared causal-LM backbone (the common modern
-    setup), mean pooling over valid positions."""
+    setup), mean pooling over valid positions. ``precision`` wraps the
+    encoder with the generic compute-dtype caster
+    (core/precision.apply_compute_dtype) — LMConfig carries its own dtype,
+    so the policy is applied at the DualEncoder boundary."""
 
     def init(rng):
         kq, kp = jax.random.split(rng)
@@ -66,9 +81,10 @@ def make_lm_dual_encoder(cfg: LMConfig, *, shared: bool = True) -> DualEncoder:
         tokens, mask = _as_tokens(batch)
         return encode_pooled(params["passage"], cfg, tokens, mask)
 
-    return DualEncoder(
+    enc = DualEncoder(
         init=init,
         encode_query=encode_query,
         encode_passage=encode_passage,
         rep_dim=cfg.d_model,
     )
+    return enc if precision is None else apply_compute_dtype(enc, precision)

@@ -26,6 +26,7 @@ class AdamWState(NamedTuple):
     count: jnp.ndarray  # () int32
     mu: Any             # first moment (params-shaped, fp32)
     nu: Any             # second moment (params-shaped, fp32)
+    master: Any = None  # fp32 master params (only with keep_master_params)
 
 
 def adamw(
@@ -37,13 +38,25 @@ def adamw(
     weight_decay: float = 0.0,
     mask: Optional[Callable[[Any], Any]] = None,
     moment_dtype=jnp.float32,
+    keep_master_params: bool = False,
 ) -> GradientTransformation:
-    """AdamW with configurable-moment-dtype (mixed-precision safe).
+    """AdamW with a PrecisionPolicy-shaped dtype story (core/precision.py).
 
     ``mask(params)`` may return a pytree of bools selecting which leaves get
     weight decay (e.g. exclude LayerNorm/bias, the BERT convention).
     ``moment_dtype=bf16`` halves optimizer-state HBM for the 100B+ configs
     (momentum quantization; the accumulation arithmetic stays fp32).
+
+    Master params: under the shipped precision presets the *train-state
+    params are already the fp32 masters* (``param_dtype=fp32``) and the
+    encoders make transient bf16 compute copies at application, so nothing
+    extra is stored here. ``keep_master_params=True`` supports the converse
+    layout — params stored in a low precision (true bf16 weights) — by
+    carrying fp32 masters inside the optimizer state: moments and the update
+    arithmetic run on the masters, and the emitted update re-rounds the
+    low-precision params to the new master value each step, so repeated
+    rounding never accumulates across steps (tracks the fp32 trajectory to
+    bf16 tolerance — tests/test_precision.py).
     """
 
     def init(params):
@@ -53,7 +66,14 @@ def adamw(
         nu = jax.tree_util.tree_map(
             lambda p: jnp.zeros_like(p, dtype=moment_dtype), params
         )
-        return AdamWState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+        master = None
+        if keep_master_params:
+            master = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params
+            )
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32), mu=mu, nu=nu, master=master
+        )
 
     def update(grads, state, params):
         count = state.count + 1
@@ -81,6 +101,27 @@ def adamw(
         else:
             wd_mask = jax.tree_util.tree_map(lambda _: True, params)
 
+        if keep_master_params:
+            def leaf_master(m, v, p, mstr, use_wd):
+                m = m.astype(jnp.float32)
+                v = v.astype(jnp.float32)
+                step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+                if weight_decay:
+                    step = step + jnp.where(use_wd, weight_decay, 0.0) * mstr
+                return mstr - lr * step
+
+            new_master = jax.tree_util.tree_map(
+                leaf_master, mu, nu, params, state.master, wd_mask
+            )
+            # re-round from the fp32 master every step: p_new ends up at
+            # round(master_new), so low-precision rounding never compounds
+            updates = jax.tree_util.tree_map(
+                lambda nm, p: nm.astype(p.dtype) - p, new_master, params
+            )
+            return updates, AdamWState(
+                count=count, mu=mu, nu=nu, master=new_master
+            )
+
         def leaf_update(m, v, p, use_wd):
             m = m.astype(jnp.float32)
             v = v.astype(jnp.float32)
@@ -90,7 +131,7 @@ def adamw(
             return (-lr * step).astype(p.dtype)
 
         updates = jax.tree_util.tree_map(leaf_update, mu, nu, params, wd_mask)
-        return updates, AdamWState(count=count, mu=mu, nu=nu)
+        return updates, AdamWState(count=count, mu=mu, nu=nu, master=None)
 
     return GradientTransformation(init=init, update=update)
 

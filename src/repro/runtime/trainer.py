@@ -38,6 +38,24 @@ from repro.data.loader import LoaderState
 
 @dataclasses.dataclass
 class TrainerConfig:
+    """Loop-level knobs only — *what* a step computes (the method
+    composition, the loss backend, the PrecisionPolicy) lives entirely in
+    the jitted ``step_fn`` the trainer is handed (core/step_program.py), so
+    every precision preset checkpoints, restores and replays through this
+    loop unchanged: the checkpoint payload carries the state's dtypes (bf16
+    bank rings included), and ``abort_on_nan`` reads the fp32 loss metric
+    the accum-dtype contract guarantees.
+
+    total_steps: run length in optimizer updates.
+    checkpoint_dir/checkpoint_every/keep_checkpoints: periodic async
+        checkpoints of (train state, loader state); None disables.
+    max_restarts: restore-and-replay budget for failing steps.
+    straggler_factor/straggler_warmup/ema_decay: step-time watchdog (steps
+        slower than factor x EMA are logged after the warm-up).
+    abort_on_nan: treat a non-finite loss as a step failure (restore).
+    log_every: metric print cadence.
+    """
+
     total_steps: int
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 100

@@ -1,0 +1,43 @@
+"""Examples must keep running against the current StepProgram API.
+
+quickstart.py and train_retriever.py predate the StepProgram refactors
+(PRs 1-3) and silently rotted once before; this smoke imports and drives
+both at toy scale so an API break fails CI instead of a user."""
+
+import importlib.util
+import os
+
+import pytest
+
+
+def _load_example(name):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "examples", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"example_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_runs_end_to_end():
+    """Both phases (DPR warm-up -> explicit dual_bank x scan composition)
+    plus the final top-k eval, at smoke scale."""
+    mod = _load_example("quickstart")
+    mod.main(warm_steps=2, steps=3, n_passages=64)
+
+
+@pytest.mark.parametrize("extra", [
+    [],                                        # the default contaccum path
+    ["--precision", "bf16_banks", "--loss-impl", "fused"],
+])
+def test_train_retriever_runs_end_to_end(extra):
+    """The production-path driver, including the new --precision flag."""
+    mod = _load_example("train_retriever")
+    mod.main([
+        "--steps", "3",
+        "--warmup-steps", "2",
+        "--total-batch", "16",
+        "--local-batch", "8",
+        "--bank", "16",
+        "--corpus", "64",
+    ] + extra)

@@ -13,6 +13,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.infonce import in_batch_loss, info_nce
+from repro.core.loss import contrastive_loss
 from repro.core.memory_bank import init_bank, n_valid, push
 from repro.data.loader import ShardedLoader
 from repro.optim.schedules import linear_warmup_linear_decay
@@ -75,6 +76,33 @@ def test_infonce_masked_rows_do_not_contribute(n, seed):
     mask = jnp.concatenate([jnp.ones(n, bool), jnp.zeros(3, bool)])
     masked = info_nce(q2, p, labels=labels, row_mask=mask).loss
     np.testing.assert_allclose(full, masked, rtol=1e-5, atol=1e-6)
+
+
+@_settings
+@given(
+    n=st.integers(2, 12),
+    d=st.integers(2, 16),
+    seed=st.integers(0, 2**16),
+    tau=st.floats(0.1, 4.0),
+    dtype=st.sampled_from(["float32", "bfloat16", "float16"]),
+)
+def test_loss_statistics_are_fp32_regardless_of_input_dtype(n, d, seed, tau, dtype):
+    """PrecisionPolicy accum contract (core/precision.py): whatever float
+    dtype the representations arrive in, every softmax statistic the loss
+    reports — loss, accuracy, n_rows, n_negatives — is computed and returned
+    in fp32, finite, and within low-precision rounding of the fp32 value."""
+    rng = np.random.default_rng(seed)
+    q, p = _reps(rng, n, d), _reps(rng, n, d)
+    _, ref = contrastive_loss(q, p, temperature=tau)
+    loss_dev, aux = contrastive_loss(
+        q.astype(dtype), p.astype(dtype), temperature=tau
+    )
+    for stat in (loss_dev, aux.loss, aux.accuracy, aux.n_rows, aux.n_negatives):
+        assert stat.dtype == jnp.float32, dtype
+        assert np.isfinite(float(stat))
+    # low-precision inputs perturb the value only within rounding tolerance
+    np.testing.assert_allclose(float(aux.loss), float(ref.loss),
+                               rtol=5e-2, atol=5e-2)
 
 
 @_settings
