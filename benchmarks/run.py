@@ -25,6 +25,7 @@ from benchmarks import (
     bench_precision,
     bench_regimes,
     bench_roofline,
+    bench_serving,
     bench_table1,
     bench_table2,
 )
@@ -40,6 +41,7 @@ SUITES = {
     "fused_infonce": bench_fused_infonce.run,
     "distributed": bench_distributed.run,
     "precision": bench_precision.run,
+    "serving": bench_serving.run,
 }
 
 

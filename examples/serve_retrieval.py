@@ -1,6 +1,6 @@
-"""Serve a retriever with dynamic batching: offline index build with the
-passage tower, online query serving with request coalescing, blocked exact
-top-k scoring.
+"""Serve a retriever through the Retriever API: offline index build with the
+passage tower (policy index dtype), online query serving with request
+coalescing, exact blocked top-k through a pluggable search backend.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -8,32 +8,35 @@ top-k scoring.
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.retrieval import SyntheticRetrievalCorpus
-from repro.models.bert import BertConfig, bert_encode, init_bert
-from repro.runtime.server import build_index, make_retrieval_server
-import jax.numpy as jnp
+from repro.models.bert import BertConfig
+from repro.models.towers import make_bert_dual_encoder
+from repro.retrieval import Retriever, RetrieverConfig, make_server
 
 
 def main():
     cfg = BertConfig(name="bert-mini", n_layers=2, d_model=64, n_heads=4,
                      d_ff=128, vocab_size=2000, max_position=64,
                      dtype=jnp.float32)
-    params = init_bert(jax.random.PRNGKey(0), cfg)
+    enc = make_bert_dual_encoder(cfg)
+    params = enc.init(jax.random.PRNGKey(0))
     corpus = SyntheticRetrievalCorpus(n_passages=2048, vocab_size=2000,
                                       q_len=16, p_len=32)
 
-    # offline: encode the corpus with the passage tower
+    # offline: encode the corpus with the passage tower into an IndexStore
+    retriever = Retriever(
+        enc, params, RetrieverConfig(top_k=10, search_impl="dense")
+    )
     t0 = time.time()
-    index = build_index(lambda t: bert_encode(params, cfg, t),
-                        corpus.passages, batch=256)
-    print(f"index {index.shape} built in {time.time()-t0:.1f}s")
+    store = retriever.build_index(corpus.passages)
+    print(f"index {store.reps.shape} ({str(store.reps.dtype)}) "
+          f"built in {time.time()-t0:.1f}s")
 
-    # online: dynamic-batching server
-    server = make_retrieval_server(
-        lambda t: bert_encode(params, cfg, t), index, k=10, max_batch=16,
-    ).start()
+    # online: dynamic-batching server over Retriever.search
+    server = make_server(retriever, max_batch=16).start()
     try:
         t0 = time.time()
         futs = [server.submit(corpus.queries[i]) for i in range(128)]

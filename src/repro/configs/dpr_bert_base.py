@@ -139,6 +139,38 @@ DPR_SHAPES = {
             "shard_banks": True,
         },
     ),
+    # the inference half (repro/retrieval): online serving shape — one
+    # coalesced query batch against a 1M-passage index sharded in row
+    # blocks over the DP axes, bf16 index rows (policy bank dtype), fp32
+    # scores. 6 MiB of index per device on the 256-chip mesh vs 3 GiB
+    # replicated fp32
+    "serve_topk": ShapeCell(
+        "serve_topk",
+        "retrieval_serve",
+        {
+            "n_queries": 32,
+            "n_passages": 1 << 20,
+            "top_k": 100,
+            "q_len": 32,
+            "search_impl": "dense",
+            "precision": "bf16_banks",
+        },
+    ),
+    # the offline ANCE-style eval sweep: thousands of queries per pass with
+    # the training-time encoder, fused Pallas QK^T + running-top-k so the
+    # (Q, N) score matrix never materializes
+    "eval_topk": ShapeCell(
+        "eval_topk",
+        "retrieval_eval",
+        {
+            "n_queries": 2048,
+            "n_passages": 1 << 20,
+            "top_k": 100,
+            "q_len": 32,
+            "search_impl": "fused",
+            "precision": "bf16_banks",
+        },
+    ),
     # ... and cached-VJP + passage-only bank (pre-batch negatives)
     "prebatch_cache_batch": ShapeCell(
         "prebatch_cache_batch",

@@ -1,22 +1,45 @@
-"""Retrieval evaluation: exact Top@k over a corpus (the paper's metric)."""
+"""Retrieval evaluation: exact Top@k over a corpus (the paper's metric).
+
+A thin wrapper over the Retriever API (repro/retrieval): the corpus is
+encoded into an IndexStore and each eval query's top-max(ks) ids come from
+the blocked exact search — the old full (Q, N) score matrix + all-N argsort
+is gone, so peak transient memory is bounded by the search backend's block
+size instead of the corpus size (pinned by tests/test_retrieval.py).
+
+Because the Retriever is built from the *training* DualEncoder + params, the
+same call serves the trainer's periodic eval hook
+(``TrainerConfig.eval_every``) — the ANCE-style loop of re-encoding and
+searching the corpus with the current training-time encoder.
+"""
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import DualEncoder
+from repro.retrieval.index import encode_corpus as _encode_corpus
+from repro.retrieval.retriever import Retriever, RetrieverConfig
 
 
 def encode_corpus(enc: DualEncoder, params, passages: np.ndarray, batch: int = 256):
-    reps = []
-    for lo in range(0, len(passages), batch):
-        reps.append(np.asarray(
-            enc.encode_passage(params, jnp.asarray(passages[lo:lo + batch]))
-        ))
-    return np.concatenate(reps)
+    """Fixed-batch passage-tower corpus encode (kept for existing callers;
+    the Retriever builds its IndexStore through the same path)."""
+    import jax
+
+    encode = jax.jit(enc.encode_passage)
+    return _encode_corpus(lambda toks: encode(params, toks), passages, batch=batch)
+
+
+def recall_at(ids: np.ndarray, gold: np.ndarray, ks: Sequence[int]) -> Dict[str, float]:
+    """Top@k hit rates from ranked id lists (Q, >=max(ks)); -1 ids (empty
+    slots) never match."""
+    gold = np.asarray(gold)
+    return {
+        f"top@{k}": float(np.mean((ids[:, :k] == gold[:, None]).any(axis=1)))
+        for k in ks
+    }
 
 
 def evaluate_topk(
@@ -24,19 +47,46 @@ def evaluate_topk(
     params,
     corpus,
     ks: Sequence[int] = (1, 5, 20),
+    *,
+    retriever: Optional[Retriever] = None,
+    cfg: Optional[RetrieverConfig] = None,
 ) -> Dict[str, float]:
     """Exact retrieval eval over the whole corpus (paper's Top@k): corpus must
-    expose ``eval_split() -> (queries, passages, gold_idx)``."""
+    expose ``eval_split() -> (queries, passages, gold_idx)``.
+
+    Pass ``retriever`` for periodic eval (the trainer hook): its layout/
+    backend/precision and *jitted programs* are reused across calls — the
+    retriever's params are refreshed to ``params`` and the corpus is
+    re-encoded each call (the ANCE re-encode), so repeated evals pay no
+    re-trace. Or pass ``cfg`` to control the search configuration; by
+    default a replicated dense fp32 Retriever is built on the fly (one-off
+    compile — fine for a single eval, wasteful inside a training loop) —
+    results identical to the historical argsort path."""
     queries, passages, gold = corpus.eval_split(
         n=min(256, corpus.n_passages // 4)
     )
-    q = np.asarray(enc.encode_query(params, jnp.asarray(queries)))
-    p = encode_corpus(enc, params, passages)
-    scores = q @ p.T
-    order = np.argsort(-scores, axis=1)
-    return {
-        f"top@{k}": float(np.mean([
-            gold[i] in order[i, :k] for i in range(len(gold))
-        ]))
-        for k in ks
-    }
+    k_max = max(ks)
+    if retriever is None:
+        cfg = cfg or RetrieverConfig()
+        if cfg.top_k < k_max:
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, top_k=k_max)
+        retriever = Retriever(enc, params, cfg)
+        retriever.build_index(passages)
+    else:
+        if cfg is not None:
+            raise ValueError(
+                "pass either retriever= (its own RetrieverConfig is used) "
+                "or cfg=, not both — the cfg would be silently ignored"
+            )
+        if retriever.cfg.top_k < k_max:
+            raise ValueError(
+                f"retriever.top_k={retriever.cfg.top_k} < max(ks)={k_max}"
+            )
+        # refresh to the current training-time params and re-encode: a
+        # stale index would silently score against an old encoder
+        retriever.params = params
+        retriever.build_index(passages)
+    ids, _ = retriever.search(queries)
+    return recall_at(ids, gold, ks)

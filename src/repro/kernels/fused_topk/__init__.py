@@ -1,0 +1,3 @@
+from repro.kernels.fused_topk.ops import fused_topk_scores
+
+__all__ = ["fused_topk_scores"]

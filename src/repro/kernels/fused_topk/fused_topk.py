@@ -1,0 +1,134 @@
+"""Blocked QK^T + running top-k Pallas kernel (the serving-side hot loop).
+
+The inference half of the paper's retriever scores every query against the
+whole corpus index — a (Q, N) similarity matrix with N in the millions at
+production scale. Like the fused InfoNCE kernel this matrix never touches
+HBM: the kernel streams (block_q x block_n) tiles through VMEM and folds
+each tile into a per-row running top-k scratch (scores + global column ids),
+the search-side analogue of fused_infonce's online-softmax accumulator.
+
+Merge semantics per tile: concatenate the (bq, k) running best with the
+(bq, bn) fresh tile scores and re-take top_k. The running block sits first in
+the concatenation and earlier column blocks were folded earlier, so ties
+break toward the lowest column id — exactly ``lax.top_k`` over the full row
+(ref.py). Invalid columns (corpus padding, masked shards) are forced to
+NEG_INF with id -1, so k > n_valid rows come back with -1-id tail slots
+instead of garbage.
+
+Grid layout mirrors fused_infonce_fwd: (Q/bq, N/bn), N innermost so the
+top-k scratch carries across column blocks; outputs are written on the last
+column step. The contraction dim d is loaded whole per tile (rep_dim <= 8192
+fits VMEM). Mixed precision: q/p block loads may be bf16 (the policy's
+compute/bank dtypes — a bf16 index halves the tile bytes); every tile matmul
+accumulates in fp32 (``preferred_element_type``) and the running scores are
+fp32 throughout, so a low-precision index perturbs scores only at input
+rounding, never at accumulation.
+
+Inference-only: no VJP — serving never differentiates through search.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.fused_infonce.fused_infonce import (
+    NEG_INF,
+    _blocking,
+    _pad_axis0,
+)
+
+
+def _topk_kernel(valid_ref, q_ref, p_ref, s_out, i_out, s_scr, i_scr,
+                 *, inv_tau, k, bn, n_blocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG_INF)
+        i_scr[...] = jnp.full_like(i_scr, -1)
+
+    s = jax.lax.dot_general(
+        q_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inv_tau                                              # (bq, bn)
+    vld = valid_ref[pl.ds(j * bn, bn)] != 0
+    s = jnp.where(vld[None, :], s, NEG_INF)
+    ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ids = jnp.where(vld[None, :], ids, -1)
+
+    cat_s = jnp.concatenate([s_scr[...], s], axis=1)         # (bq, k + bn)
+    cat_i = jnp.concatenate([i_scr[...], ids], axis=1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    s_scr[...] = top_s
+    i_scr[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        s_out[...] = s_scr[...]
+        i_out[...] = i_scr[...]
+
+
+def fused_topk(
+    q: jnp.ndarray,                       # (Q, d)
+    p: jnp.ndarray,                       # (N, d) corpus index block
+    k: int,
+    *,
+    col_valid: Optional[jnp.ndarray] = None,   # (N,) bool
+    inv_tau: float = 1.0,
+    block_q: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(scores (Q, k) fp32, ids (Q, k) int32); ids are -1 for empty slots.
+
+    Arbitrary Q/N are handled by internal padding (padded rows are sliced
+    off, padded columns are marked invalid), matching fused_infonce.
+    """
+    m, d = q.shape
+    n, _ = p.shape
+    bq, bn, m_pad, n_pad = _blocking(m, n, block_q, block_n)
+    ct = jnp.result_type(q.dtype, p.dtype)
+    valid = (
+        jnp.ones((n,), jnp.int32)
+        if col_valid is None
+        else col_valid.astype(jnp.int32)
+    )
+    q = _pad_axis0(q.astype(ct), m_pad)
+    p = _pad_axis0(p.astype(ct), n_pad)
+    valid = _pad_axis0(valid, n_pad)
+    grid = (m_pad // bq, n_pad // bn)
+
+    kernel = functools.partial(
+        _topk_kernel, inv_tau=inv_tau, k=k, bn=bn, n_blocks=grid[1]
+    )
+    scores, ids = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bq, d), lambda i, j, valid: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j, valid: (j, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bq, k), lambda i, j, valid: (i, 0)),
+                pl.BlockSpec((bq, k), lambda i, j, valid: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bq, k), jnp.float32),
+                pltpu.VMEM((bq, k), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, q, p)
+    return scores[:m], ids[:m]

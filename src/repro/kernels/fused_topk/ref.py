@@ -1,0 +1,46 @@
+"""Dense reference for the fused top-k scoring kernel.
+
+Materializes the full (Q, N) similarity matrix — the thing the fused kernel
+exists to avoid — and reduces it with one ``lax.top_k``. Used by the parity
+tests and as the semantic contract:
+
+  * scores are fp32 whatever dtype q/p arrive in (the serving counterpart of
+    the LossBackend fp32-stats contract);
+  * invalid columns (``col_valid`` False) never win a slot;
+  * ties break toward the lowest column id (``lax.top_k`` semantics);
+  * slots beyond the number of valid columns (k > n_valid) come back with
+    score ``NEG_INF`` and id ``-1``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_infonce.fused_infonce import NEG_INF
+
+
+def topk_scores_ref(
+    q: jnp.ndarray,                       # (Q, d)
+    p: jnp.ndarray,                       # (N, d)
+    k: int,
+    *,
+    col_valid: Optional[jnp.ndarray] = None,   # (N,) bool
+    inv_tau: float = 1.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact (scores (Q, k) fp32, ids (Q, k) int32) by full materialization."""
+    n = p.shape[0]
+    ct = jnp.result_type(q.dtype, p.dtype)
+    s = jax.lax.dot_general(
+        q.astype(ct), p.astype(ct), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inv_tau
+    if col_valid is not None:
+        s = jnp.where(col_valid[None, :], s, NEG_INF)
+    if k > n:  # pad columns so top_k is well-defined, mark them invalid
+        s = jnp.pad(s, ((0, 0), (0, k - n)), constant_values=NEG_INF)
+    scores, ids = jax.lax.top_k(s, k)
+    ids = jnp.where(scores > NEG_INF / 2, ids.astype(jnp.int32), -1)
+    return scores, ids

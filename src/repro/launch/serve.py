@@ -1,8 +1,20 @@
-"""Serving driver: build a passage index with the passage tower, start the
-dynamic-batching retrieval server, and run a load test with mixed
-single-query requests. CPU-runnable end to end at reduced scale.
+"""Serving driver on the Retriever API: load a trainer checkpoint (or init
+fresh), build the passage index, start the dynamic-batching server, and run
+a load test with single-query requests. CPU-runnable end to end.
 
   PYTHONPATH=src python -m repro.launch.serve --n-passages 1024 --n-queries 64
+
+Serve a model trained by launch/train.py (same tiny-bert tower config):
+
+  PYTHONPATH=src python -m repro.launch.train --steps 100 --checkpoint-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.serve --ckpt /tmp/ckpt
+
+Sharded bf16 index over an 8-way DP mesh with the fused Pallas search
+kernel (on CPU force the host devices first):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve \\
+      --dp 8 --precision bf16_banks --search-impl fused
 """
 
 from __future__ import annotations
@@ -13,14 +25,36 @@ import time
 import jax
 import numpy as np
 
+from repro.core.precision import PRECISION_PRESETS
 from repro.data.retrieval import SyntheticRetrievalCorpus
 from repro.launch.train import tiny_bert
-from repro.models.bert import bert_encode, init_bert
-from repro.runtime.server import build_index, make_retrieval_server
+from repro.models.towers import make_bert_dual_encoder
+from repro.retrieval import (
+    Retriever,
+    RetrieverConfig,
+    load_trained_params,
+    make_dp_mesh,
+    make_server,
+)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default=None,
+                    help="runtime/trainer.py checkpoint dir: serve the "
+                         "trained params instead of a fresh init")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="shard the index over an N-way DP mesh (0 = "
+                         "replicated; needs jax.device_count() >= N)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=sorted(PRECISION_PRESETS),
+                    help="PrecisionPolicy preset: queries encoded/scored in "
+                         "compute dtype, index stored in bank dtype "
+                         "(bf16_banks halves index bytes), scores fp32")
+    ap.add_argument("--search-impl", default="dense",
+                    choices=["dense", "fused"],
+                    help="per-device scoring: blocked-scan top-k vs the "
+                         "fused Pallas QK^T + running-top-k kernel")
     ap.add_argument("--n-passages", type=int, default=1024)
     ap.add_argument("--n-queries", type=int, default=64)
     ap.add_argument("--top-k", type=int, default=20)
@@ -29,22 +63,36 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = tiny_bert()
-    params = init_bert(jax.random.PRNGKey(args.seed), cfg)
+    enc = make_bert_dual_encoder(cfg, precision=args.precision)
+    if args.ckpt:
+        params, step = load_trained_params(args.ckpt)
+        print(f"restored trained params from {args.ckpt} (step {step})")
+    else:
+        params = enc.init(jax.random.PRNGKey(args.seed))
     corpus = SyntheticRetrievalCorpus(
         n_passages=args.n_passages, q_len=16, p_len=32, seed=args.seed
     )
 
-    t0 = time.time()
-    index = build_index(
-        lambda toks: bert_encode(params, cfg, toks), corpus.passages, batch=128
+    rcfg = RetrieverConfig(
+        top_k=args.top_k,
+        search_impl=args.search_impl,
+        index_layout="sharded" if args.dp else "replicated",
+        precision=args.precision,
+        encode_batch=128,
     )
-    print(f"index: {index.shape} built in {time.time()-t0:.2f}s")
+    mesh = make_dp_mesh(args.dp) if args.dp else None
+    retriever = Retriever(enc, params, rcfg, mesh=mesh)
 
-    server = make_retrieval_server(
-        lambda toks: bert_encode(params, cfg, toks),
-        index,
-        k=args.top_k,
-        max_batch=args.max_batch,
+    t0 = time.time()
+    store = retriever.build_index(corpus.passages)
+    print(
+        f"index: {store.reps.shape} ({str(store.reps.dtype)}, "
+        f"{store.bytes_per_device()/1024:.0f} KiB/device over "
+        f"{store.shards} shard(s)) built in {time.time()-t0:.2f}s"
+    )
+
+    server = make_server(
+        retriever, max_batch=args.max_batch
     ).start()
     try:
         t0 = time.time()
@@ -54,15 +102,23 @@ def main(argv=None):
         hits = 0
         for i, fut in enumerate(futures):
             ids, scores = fut.get(timeout=60)
-            hits += int(i in ids)       # untrained model: recall is luck; the
-        dt = time.time() - t0            # load test validates the serving path
+            hits += int(i in ids)
+        dt = time.time() - t0
         sizes = server.batch_sizes
+        stats = {
+            "qps": args.n_queries / dt,
+            "recall": hits / args.n_queries,
+            "batch_mean": float(np.mean(sizes)),
+            "batch_max": int(max(sizes)),
+            "index_bytes_per_device": store.bytes_per_device(),
+        }
         print(
             f"served {args.n_queries} queries in {dt:.2f}s "
-            f"({args.n_queries/dt:.1f} qps), top-{args.top_k} recall "
-            f"{hits/args.n_queries:.3f}, mean coalesced batch "
-            f"{np.mean(sizes):.1f} (max {max(sizes)})"
+            f"({stats['qps']:.1f} qps), top-{args.top_k} recall "
+            f"{stats['recall']:.3f}, mean coalesced batch "
+            f"{stats['batch_mean']:.1f} (max {stats['batch_max']})"
         )
+        return stats
     finally:
         server.stop()
 

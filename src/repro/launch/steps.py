@@ -646,6 +646,71 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     )
 
 
+# --------------------------------------- retrieval serving / eval (the paper)
+def _retrieval_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellProgram:
+    """Inference cells on the Retriever surface (repro/retrieval): query-tower
+    encode + exact top-k against a corpus index sharded in contiguous row
+    blocks over the DP axes (P(dp) rows — the bank_rules layout applied to
+    the serving-side persistent state). Queries stay replicated: the big
+    operand (the index) never moves; GSPMD derives the candidate merge.
+
+    ``retrieval_serve`` is the online shape (small coalesced batch),
+    ``retrieval_eval`` the offline one (the periodic ANCE-style eval sweep:
+    thousands of queries against the full index). Both honor the cell's
+    "precision" (index rows in the policy's bank dtype, query reps in
+    compute dtype, scores fp32) and "search_impl" (dense blocked-scan vs
+    the fused Pallas QK^T + running-top-k kernel)."""
+    from repro.retrieval.retriever import RetrieverConfig
+
+    bcfg: BertConfig = arch.model_cfg
+    p = cell.params
+    dp = dp_axes(mesh)
+    policy = resolve_precision(p.get("precision", "bf16_banks"))
+    bcfg = bcfg.with_precision(policy)
+    rcfg = RetrieverConfig(
+        top_k=p["top_k"],
+        search_impl=p.get("search_impl", "dense"),
+        precision=policy,
+    )
+    backend = rcfg.resolve_backend()
+    enc = make_bert_dual_encoder(bcfg)
+    k = p["top_k"]
+
+    def search_step(params, index, row_valid, tokens):
+        q = enc.encode_query(params, tokens).astype(policy.compute_dtype)
+        scores, ids = backend.topk(q, index, k, col_valid=row_valid)
+        return ids, scores
+
+    n_dev = _axes_size(mesh, dp)
+    n = _pad_to(p["n_passages"], n_dev)
+    q_n, ql, d = p["n_queries"], p["q_len"], bcfg.d_model
+    params_s = jax.eval_shape(lambda: enc.init(jax.random.PRNGKey(0)))
+    args = (
+        _shard_like(mesh, params_s, [(r".*", P())]),
+        _sds(mesh, (n, d), policy.bank_dtype, P(dp, None)),
+        _sds(mesh, (n,), bool, P(dp)),
+        _sds(mesh, (q_n, ql), jnp.int32, P()),
+    )
+    index_bytes_dev = (n * d * jnp.dtype(policy.bank_dtype).itemsize) // n_dev
+    return CellProgram(
+        arch_id=arch.arch_id, shape_name=cell.name, kind=cell.kind,
+        fn=search_step, args=args, donate_argnums=(),
+        static_info={
+            # encode is inference (2ND); scoring is one Q x N x d matmul
+            "model_flops": 2.0 * bcfg.param_count() * q_n * ql
+            + 2.0 * q_n * n * d,
+            "params": bcfg.param_count(),
+            "top_k": k,
+            "search_impl": rcfg.search_impl,
+            "precision": policy.name,
+            "index_rows": n,
+            "index_shards": n_dev,
+            "index_bytes_per_device": float(index_bytes_dev),
+            "padded": {"n_passages": [p["n_passages"], n]},
+        },
+    )
+
+
 # --------------------------------------------------------------- dispatcher
 _BUILDERS = {
     "train": _lm_train_program,
@@ -658,6 +723,8 @@ _BUILDERS = {
     "recsys_serve": _recsys_program,
     "recsys_retrieval": _recsys_program,
     "contrastive": _contrastive_program,
+    "retrieval_serve": _retrieval_program,
+    "retrieval_eval": _retrieval_program,
 }
 
 

@@ -1,0 +1,27 @@
+"""Retriever API: the inference half of the framework (see retriever.py).
+
+One sharded, precision-aware surface from index build to serving and eval:
+
+  RetrieverConfig -> Retriever(encoder, params) over an IndexStore and a
+  SearchBackend; serving.load_trained_params / serving.make_server close
+  the trainer-checkpoint -> serve loop.
+"""
+
+from repro.retrieval.index import IndexStore, build_index_store, encode_corpus
+from repro.retrieval.retriever import Retriever, RetrieverConfig, make_dp_mesh
+from repro.retrieval.search import (
+    SEARCH_BACKENDS,
+    DenseSearchBackend,
+    FusedSearchBackend,
+    SearchBackend,
+    resolve_search_backend,
+)
+from repro.retrieval.serving import load_trained_params, make_server
+
+__all__ = [
+    "IndexStore", "build_index_store", "encode_corpus",
+    "Retriever", "RetrieverConfig", "make_dp_mesh",
+    "SEARCH_BACKENDS", "DenseSearchBackend", "FusedSearchBackend",
+    "SearchBackend", "resolve_search_backend",
+    "load_trained_params", "make_server",
+]

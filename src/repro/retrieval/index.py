@@ -1,0 +1,116 @@
+"""IndexStore: the encoded corpus, precision-aware and shardable.
+
+The offline half of serving (ANCE-style: the corpus is periodically
+re-encoded with the *training-time* passage tower). ``build_index_store``
+runs the fixed-batch host encode loop (one compiled shape for the whole
+corpus) and stores the matrix in the PrecisionPolicy's ``bank_dtype`` — the
+index is persistent HBM exactly like the memory-bank rings, so it rides the
+same dtype lever (bf16 index = half the bytes, scores stay fp32 at the
+backend contract).
+
+Two layouts, mirroring the bank modes (``cfg.shard_banks``):
+
+  * **replicated** — every device holds all N rows.
+  * **sharded** — rows are padded to a multiple of the DP shard count and
+    split into contiguous row blocks; under shard_map each device scores its
+    own ``rows/D`` block locally (gather-free — the index never moves) and
+    the per-device top-k candidates are merged with one psum
+    (retriever.py). Per-device index HBM shrinks by 1/D at identical
+    results: ids match the replicated layout bit-for-bit.
+
+Padding rows are zeros with ``row_valid`` False, so they are masked exactly
+(score NEG_INF, never a candidate) rather than approximately.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class IndexStore(NamedTuple):
+    """Encoded corpus in its global layout.
+
+    reps:      (rows, d) — row-major corpus representations, ``rows`` padded
+               up to a multiple of ``shards``; dtype = the policy's index
+               (bank) dtype. Host numpy as built by ``build_index_store``;
+               the Retriever places it (replicated device array, or sharded
+               row blocks via one NamedSharding device_put).
+    row_valid: (rows,) bool — False for padding rows.
+    n_total:   real corpus size (== row_valid.sum()).
+    shards:    DP shard count this store is laid out for (1 = replicated).
+    """
+
+    reps: jnp.ndarray
+    row_valid: jnp.ndarray
+    n_total: int
+    shards: int = 1
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.reps.shape[0] // self.shards
+
+    def bytes_per_device(self) -> int:
+        """Persistent index HBM per device — the serving memory axis the
+        precision policy and sharding exist to cut."""
+        return (
+            self.reps.shape[0]
+            * self.reps.shape[1]
+            * jnp.dtype(self.reps.dtype).itemsize
+        ) // self.shards
+
+
+def encode_corpus(
+    encode_passage: Callable[[Any], jnp.ndarray],
+    passages: np.ndarray,
+    *,
+    batch: int = 256,
+) -> np.ndarray:
+    """Encode a corpus in fixed batches (pads the tail so one compiled shape
+    serves the whole build). Returns host fp32-or-compute-dtype rows."""
+    n = len(passages)
+    out: List[np.ndarray] = []
+    for lo in range(0, n, batch):
+        chunk = passages[lo : lo + batch]
+        if len(chunk) < batch:
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], batch - len(chunk), axis=0)]
+            )
+        out.append(np.asarray(encode_passage(chunk)))
+    return np.concatenate(out)[:n]
+
+
+def build_index_store(
+    encode_passage: Callable[[Any], jnp.ndarray],
+    passages: np.ndarray,
+    *,
+    batch: int = 256,
+    dtype: Any = jnp.float32,
+    shards: int = 1,
+) -> IndexStore:
+    """Host-side index build: encode, cast to the index dtype, pad rows to a
+    multiple of ``shards`` (padding masked via ``row_valid``).
+
+    The returned arrays stay on the *host* (numpy; the bf16 cast goes
+    through ml_dtypes): the full matrix must never land on one device —
+    at the scales the sharded layout targets it would not fit. Placement
+    (replicated device array or one device_put straight into the sharded
+    layout, each device pulling only its rows/D block) is the Retriever's
+    job (retriever.build_index)."""
+    reps = encode_corpus(encode_passage, passages, batch=batch)
+    n = reps.shape[0]
+    rows = ((n + shards - 1) // shards) * shards
+    valid = np.zeros((rows,), bool)
+    valid[:n] = True
+    if rows > n:
+        reps = np.concatenate(
+            [reps, np.zeros((rows - n, reps.shape[1]), reps.dtype)]
+        )
+    return IndexStore(
+        reps=reps.astype(jnp.dtype(dtype)),
+        row_valid=valid,
+        n_total=n,
+        shards=shards,
+    )

@@ -1,0 +1,85 @@
+"""Serving layer: trainer checkpoints -> Retriever -> dynamic batching.
+
+Closes the training/inference loop the ANCE recipe requires: the dual
+encoder that ``runtime/trainer.py`` checkpoints is the one that builds the
+index and answers queries. ``load_trained_params`` restores the params
+subtree straight from a trainer checkpoint *without* a template pytree —
+the checkpoint manifests are path-keyed (``state/params/query/embed/word``
+...), so serving never has to reconstruct the optimizer state, banks or
+loader state it does not need.
+
+``make_server`` rebuilds the old ``make_retrieval_server`` on
+``Retriever.search``: the BatchingServer (runtime/server.py) coalesces
+single-query requests up to the compiled batch shape; the retriever's
+jitted encode + top-k program answers each coalesced batch.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import latest_step
+from repro.retrieval.retriever import Retriever
+from repro.runtime.server import BatchingServer
+
+PARAMS_PREFIX = "state/params/"
+
+
+def load_trained_params(
+    ckpt_dir: str, step: Optional[int] = None
+) -> Tuple[Any, int]:
+    """(params, step) from a runtime/trainer.py checkpoint directory.
+
+    Reads the path-keyed manifest of the requested (default: latest valid)
+    checkpoint and rebuilds only the ``state/params/...`` subtree as nested
+    dicts of numpy arrays — dtype and shape exactly as trained (fp32
+    masters under every shipped PrecisionPolicy preset). The optimizer
+    state, memory banks and loader state are never touched.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:012d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    params: Dict[str, Any] = {}
+    found = False
+    for meta in manifest["leaves"]:
+        key = meta["key"]
+        if not key.startswith(PARAMS_PREFIX):
+            continue
+        found = True
+        node = params
+        parts = key[len(PARAMS_PREFIX):].split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = np.load(os.path.join(path, meta["file"]))
+    if not found:
+        raise ValueError(
+            f"checkpoint {path} has no {PARAMS_PREFIX!r} leaves — not a "
+            "trainer-produced ContrastiveState checkpoint?"
+        )
+    return params, step
+
+
+def make_server(
+    retriever: Retriever,
+    *,
+    max_batch: int = 32,
+    max_wait_s: float = 0.01,
+) -> BatchingServer:
+    """Dynamic-batching server over ``Retriever.search``: requests are
+    single tokenized queries; each coalesced batch runs the retriever's
+    jitted encode + top-k program once."""
+    retriever._require_index()
+
+    def serve_fn(payloads: np.ndarray):
+        return retriever.search(payloads)
+
+    return BatchingServer(serve_fn, max_batch=max_batch, max_wait_s=max_wait_s)

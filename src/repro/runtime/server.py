@@ -1,16 +1,12 @@
-"""Batched retrieval serving: the inference half of the framework.
+"""Dynamic batching for retrieval serving.
 
-Dense-retrieval serving has two phases (mirroring the paper's task):
-
-  * **Offline corpus build** — encode every passage with the passage tower in
-    fixed-size batches (`build_index`), store the matrix. At pod scale the
-    batch is sharded over the DP axes like training.
-  * **Online query serving** — a `RequestQueue` + `BatchingServer` pair:
-    requests arrive singly, the server coalesces them up to ``max_batch`` or
-    ``max_wait_s`` (classic dynamic batching), encodes with the query tower,
-    and scores against the index with an exact blocked top-k (the FAISS exact
-    path the paper uses, expressed as a jit-compiled matmul+top_k so it also
-    serves the recsys ``retrieval_cand`` shape).
+``BatchingServer`` coalesces single-query requests up to ``max_batch``
+(padding to the compiled batch shape) or flushes after ``max_wait_s`` —
+classic dynamic batching. The model-side machinery (index build, sharded
+scoring, precision) lives in the Retriever API (``repro/retrieval``);
+``retrieval.serving.make_server`` wires a Retriever to this server, and the
+legacy helpers below (``blocked_topk_scores``, ``build_index``,
+``make_retrieval_server``) are thin wrappers kept for existing callers.
 
 Fault-tolerance notes: the server is stateless between batches — a restart
 replays only in-flight requests (callers time out and retry); the index is a
@@ -39,35 +35,15 @@ def blocked_topk_scores(
     block: int = 65536,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact top-k by blocked matmul + running merge — never materializes the
-    full (Q, N) score matrix. Returns (scores (Q, k), ids (Q, k))."""
-    n = index.shape[0]
-    block = min(block, n)
-    n_blocks = (n + block - 1) // block
-    pad = n_blocks * block - n
-    if pad:
-        index = jnp.pad(index, ((0, pad), (0, 0)))
-    blocks = index.reshape(n_blocks, block, -1)
+    full (Q, N) score matrix. Returns (scores (Q, k), ids (Q, k)); ids are
+    -1 (scores NEG_INF) for slots beyond the index size when k > N.
 
-    def body(carry, inp):
-        best_s, best_i = carry
-        blk, b0 = inp
-        s = query_reps @ blk.T                                   # (Q, block)
-        ids = b0 + jnp.arange(block, dtype=jnp.int32)[None, :]
-        s = jnp.where(ids < n, s, -jnp.inf)
-        cat_s = jnp.concatenate([best_s, s], axis=1)
-        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)], axis=1)
-        top_s, pos = jax.lax.top_k(cat_s, k)
-        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
-        return (top_s, top_i), None
+    Legacy entry point: the implementation is the 'dense' SearchBackend in
+    repro/retrieval/search.py (lazy import breaks the runtime <-> retrieval
+    cycle: retrieval.serving builds on BatchingServer below)."""
+    from repro.retrieval.search import DenseSearchBackend
 
-    q = query_reps.shape[0]
-    init = (
-        jnp.full((q, k), -jnp.inf, query_reps.dtype),
-        jnp.zeros((q, k), jnp.int32),
-    )
-    offsets = jnp.arange(n_blocks, dtype=jnp.int32) * block
-    (scores, ids), _ = jax.lax.scan(body, init, (blocks, offsets))
-    return scores, ids
+    return DenseSearchBackend(block=block).topk(query_reps, index, k)
 
 
 def build_index(
@@ -76,18 +52,10 @@ def build_index(
     *,
     batch: int = 256,
 ) -> np.ndarray:
-    """Encode a corpus in fixed batches (pads the tail so one compiled shape
-    serves the whole build)."""
-    n = len(passages)
-    out: List[np.ndarray] = []
-    for lo in range(0, n, batch):
-        chunk = passages[lo : lo + batch]
-        if len(chunk) < batch:
-            chunk = np.concatenate(
-                [chunk, np.repeat(chunk[-1:], batch - len(chunk), axis=0)]
-            )
-        out.append(np.asarray(encode_passage(chunk)))
-    return np.concatenate(out)[:n]
+    """Legacy fixed-batch corpus encode (see repro/retrieval/index.py)."""
+    from repro.retrieval.index import encode_corpus
+
+    return encode_corpus(encode_passage, passages, batch=batch)
 
 
 # ----------------------------------------------------------- dynamic batching
@@ -145,7 +113,19 @@ class BatchingServer:
         except queue.Empty:
             return []
         batch = [first]
-        deadline = first.t_enqueue + self.max_wait_s
+        # Drain whatever is already queued without waiting: under backlog the
+        # batch fills instantly. (The old deadline was first.t_enqueue +
+        # max_wait_s — submit time, not collect time — so a backed-up queue
+        # made remaining <= 0 on the first iteration and every batch
+        # degraded to size 1, exactly when coalescing matters most.)
+        while len(batch) < self.max_batch:
+            try:
+                batch.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        # then wait out the remainder of the coalescing window, measured
+        # from collect time, for stragglers
+        deadline = time.monotonic() + self.max_wait_s
         while len(batch) < self.max_batch:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
@@ -186,6 +166,8 @@ def make_retrieval_server(
     max_batch: int = 32,
     max_wait_s: float = 0.01,
 ) -> BatchingServer:
+    """Legacy raw-matrix server; prefer retrieval.serving.make_server (the
+    Retriever-backed path: checkpoint load, sharding, precision, backends)."""
     index_dev = jnp.asarray(index)
 
     @jax.jit

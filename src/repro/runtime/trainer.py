@@ -54,6 +54,12 @@ class TrainerConfig:
         slower than factor x EMA are logged after the warm-up).
     abort_on_nan: treat a non-finite loss as a step failure (restore).
     log_every: metric print cadence.
+    eval_every: periodic-eval cadence (0 disables). Every ``eval_every``
+        steps the trainer calls its ``eval_fn(state, step) -> dict`` hook —
+        the ANCE-style loop of re-encoding and searching the corpus with
+        the *training-time* encoder (wire it to
+        ``repro.evaluation.evaluate_topk`` via a Retriever). Results are
+        merged into the step's history row under ``eval/`` keys.
     """
 
     total_steps: int
@@ -66,6 +72,7 @@ class TrainerConfig:
     ema_decay: float = 0.9
     abort_on_nan: bool = True
     log_every: int = 10
+    eval_every: int = 0
 
 
 class StepFailure(RuntimeError):
@@ -89,6 +96,7 @@ class Trainer:
         next_batch: Callable[[int], Any],
         *,
         loader_state: Optional[LoaderState] = None,
+        eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
         # test hooks ------------------------------------------------------
         fault_hook: Optional[Callable[[int], None]] = None,
         clock: Callable[[], float] = time.monotonic,
@@ -97,6 +105,7 @@ class Trainer:
         self.step_fn = step_fn
         self.next_batch = next_batch
         self.loader_state = loader_state or LoaderState()
+        self.eval_fn = eval_fn
         self.fault_hook = fault_hook
         self.clock = clock
         self._stop = False
@@ -174,6 +183,28 @@ class Trainer:
                 ema = dt if ema is None else cfg.ema_decay * ema + (1 - cfg.ema_decay) * dt
 
                 last_metrics = self._log(step, metrics, dt)
+                if (
+                    self.eval_fn is not None
+                    and cfg.eval_every
+                    and (step + 1) % cfg.eval_every == 0
+                ):
+                    # eval is advisory: a failing eval must never consume
+                    # the restore-and-replay budget of the training path
+                    # (a deterministic eval error would otherwise replay
+                    # the same healthy step until max_restarts kills it)
+                    try:
+                        evals = {
+                            f"eval/{k}": float(v)
+                            for k, v in self.eval_fn(state, step).items()
+                        }
+                    except Exception as e:
+                        print(f"step {step}: eval failed ({e})", flush=True)
+                    else:
+                        last_metrics.update(evals)  # history row, in place
+                        msg = " ".join(
+                            f"{k}={v:.4f}" for k, v in evals.items()
+                        )
+                        print(f"step {step}: {msg}", flush=True)
                 if cfg.checkpoint_dir and (step + 1) % cfg.checkpoint_every == 0:
                     self._save(step, state)
                 step += 1

@@ -26,6 +26,13 @@ def test_quickstart_runs_end_to_end():
     mod.main(warm_steps=2, steps=3, n_passages=64)
 
 
+def test_serve_retrieval_runs_end_to_end():
+    """The serving example on the Retriever API: index build + dynamic
+    batching + blocked top-k at its (already small) default scale."""
+    mod = _load_example("serve_retrieval")
+    mod.main()
+
+
 @pytest.mark.parametrize("extra", [
     [],                                        # the default contaccum path
     ["--precision", "bf16_banks", "--loss-impl", "fused"],
