@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.methods import build_step_program, init_state
-from repro.core.types import ContrastiveConfig, DualEncoder, RetrievalBatch
+from repro.core.types import ContrastiveConfig, RetrievalBatch
 from repro.data.loader import ShardedLoader
 from repro.data.retrieval import SyntheticRetrievalCorpus
 from repro.models.bert import BertConfig

@@ -4,7 +4,7 @@ per-family shape-cell tables from the assignment."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 _REGISTRY: Dict[str, "ArchSpec"] = {}
 

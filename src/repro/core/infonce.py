@@ -25,6 +25,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import STATS_DTYPE
+
 NEG_INF = -1e30
 
 
@@ -69,7 +71,7 @@ def info_nce(
     if labels is None:
         labels = jnp.arange(m, dtype=jnp.int32)
     logits = similarity_logits(q, p, temperature=temperature, col_mask=col_mask)
-    logits = logits.astype(jnp.float32)
+    logits = logits.astype(STATS_DTYPE)
     lse = jax.nn.logsumexp(logits, axis=-1)
     # mode="clip": masked-out rows may carry out-of-range labels (e.g. bank
     # rows with no aligned passage); the default fill mode would yield NaN
@@ -80,7 +82,7 @@ def info_nce(
     per_row = lse - pos
     if row_mask is None:
         row_mask = jnp.ones((m,), dtype=bool)
-    row_mask_f = row_mask.astype(jnp.float32)
+    row_mask_f = row_mask.astype(STATS_DTYPE)
     n_valid = jnp.maximum(row_mask_f.sum(), 1.0)
     loss = jnp.sum(per_row * row_mask_f) / n_valid
     preds = jnp.argmax(logits, axis=-1)

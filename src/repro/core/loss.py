@@ -57,7 +57,7 @@ import jax.numpy as jnp
 from repro.core.dist import DistCtx
 from repro.core.infonce import NEG_INF
 from repro.core.memory_bank import BankState, aligned_valid, columns_view
-from repro.core.precision import PrecisionPolicy, resolve_precision
+from repro.core.precision import STATS_DTYPE, PrecisionPolicy, resolve_precision
 
 
 class LossAux(NamedTuple):
@@ -136,11 +136,11 @@ class DenseLossBackend:
     def row_stats(self, q_rows, p_all, labels, col_mask, *, temperature):
         logits = jnp.einsum(
             "md,nd->mn", q_rows, p_all, preferred_element_type=jnp.float32
-        ) / jnp.asarray(temperature, jnp.float32)
+        ) / jnp.asarray(temperature, STATS_DTYPE)
         logits = jnp.where(col_mask[None, :], logits, NEG_INF)
         lse = jax.nn.logsumexp(logits, axis=-1)
         pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(STATS_DTYPE)
         return lse - pos, correct
 
 
@@ -180,7 +180,7 @@ class FusedLossBackend:
         # Tie semantics differ from dense on exact fp32 logit ties: here a
         # tied positive counts as correct, while dense argmax breaks ties by
         # column index — losses/gradients are unaffected.
-        correct = jax.lax.stop_gradient((pos >= amax).astype(jnp.float32))
+        correct = jax.lax.stop_gradient((pos >= amax).astype(STATS_DTYPE))
         return lse - pos, correct
 
 
@@ -265,7 +265,7 @@ def contrastive_loss(
     per_row_local, correct_local = row_stats(q_local, labels_local)
     loss_sum = per_row_local.sum()
     correct_sum = correct_local.sum()
-    n_rows_dev = jnp.asarray(b_local, jnp.float32)
+    n_rows_dev = jnp.asarray(b_local, STATS_DTYPE)
 
     # --- extra rows (replicated; each device takes a 1/D share) ---
     if extra_rows is not None and extra_rows.reps.shape[0] > 0 and n_extra > 0:
@@ -275,7 +275,7 @@ def contrastive_loss(
         per_row_extra, correct_extra = row_stats(
             extra_rows.reps.astype(q_local.dtype), labels_extra
         )
-        w = extra_rows.weight.astype(jnp.float32)
+        w = extra_rows.weight.astype(STATS_DTYPE)
         # replicated rows: every device computes all R rows, each contributes
         # a 1/D share; sharded rows: the R local rows are this device's own
         # partition of the global set, so they enter at full weight
@@ -292,7 +292,7 @@ def contrastive_loss(
         loss=jax.lax.stop_gradient(ctx.psum(loss_dev)),
         accuracy=jax.lax.stop_gradient(ctx.psum(correct_sum) / n_rows_g),
         n_rows=n_rows_g,
-        n_negatives=col_mask.sum().astype(jnp.float32) - 1.0,
+        n_negatives=col_mask.sum().astype(STATS_DTYPE) - 1.0,
         q_global=jax.lax.stop_gradient(ctx.gather(q_local)),
         p_global=jax.lax.stop_gradient(p_pos),
     )
@@ -320,7 +320,7 @@ def bank_extra_rows(
     return ExtraRows(
         reps=bank_q.buf,
         labels=jnp.arange(cq, dtype=jnp.int32),
-        weight=aligned_valid(bank_q, bank_p).astype(jnp.float32),
+        weight=aligned_valid(bank_q, bank_p).astype(STATS_DTYPE),
     )
 
 
@@ -354,7 +354,7 @@ def sharded_bank_extra_rows(
     return ExtraRows(
         reps=bank_q.buf,
         labels=offset + jnp.arange(cap_local, dtype=jnp.int32),
-        weight=aligned_valid(bank_q, bank_p).astype(jnp.float32),
+        weight=aligned_valid(bank_q, bank_p).astype(STATS_DTYPE),
         sharded=True,
     )
 

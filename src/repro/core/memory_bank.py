@@ -38,6 +38,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import resolve_precision
+
 
 class BankState(NamedTuple):
     buf: jnp.ndarray    # (capacity, d) stored representations
@@ -46,7 +48,9 @@ class BankState(NamedTuple):
     age: jnp.ndarray    # (capacity,) int32 — step counter at push time (diagnostics)
 
 
-def init_bank(capacity: int, dim: int, dtype=jnp.float32) -> BankState:
+def init_bank(capacity: int, dim: int, dtype=None) -> BankState:
+    if dtype is None:
+        dtype = resolve_precision(None).bank_dtype
     return BankState(
         buf=jnp.zeros((capacity, dim), dtype=dtype),
         valid=jnp.zeros((capacity,), dtype=bool),

@@ -42,10 +42,30 @@ shape cell's ``"precision"`` param.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Union
+from typing import Any, Union
 
 import jax
 import jax.numpy as jnp
+
+
+#: Named contract dtypes. These are the *non-negotiable* fp32 anchors of the
+#: stack — unlike the policy fields above they never vary per preset, and
+#: call sites reference them by contract name so a reader (and reprolint's
+#: RPL001) can tell a deliberate fp32 pin from a forgotten policy bypass.
+#:
+#: STATS_DTYPE — every statistic that feeds logging or control decisions
+#:   (loss, accuracy, bank fill, retrieval recall) is cast here *before* the
+#:   reduction; low-precision statistics change the trajectory, not just
+#:   perturb it (tests/test_precision.py).
+#: SCORE_DTYPE — retrieval similarity scores and top-k merge buffers; a bf16
+#:   score merge reorders near-ties across shards and breaks exact/sharded
+#:   search equivalence (tests/test_retriever.py).
+#: MASTER_DTYPE — AdamW master weights and moments (optim/ keeps its own
+#:   literal copy: importing this module from optim/ would cycle through
+#:   repro.core.__init__ -> step_program -> optim).
+STATS_DTYPE = jnp.float32
+SCORE_DTYPE = jnp.float32
+MASTER_DTYPE = jnp.float32
 
 
 @dataclasses.dataclass(frozen=True)

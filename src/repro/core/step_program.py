@@ -94,7 +94,7 @@ from repro.core.memory_bank import (
     shard_push,
     shard_push_pair,
 )
-from repro.core.precision import resolve_precision
+from repro.core.precision import STATS_DTYPE, resolve_precision
 from repro.core.types import (
     ContrastiveConfig,
     ContrastiveState,
@@ -638,7 +638,7 @@ def _metrics(
     def fill(bank: BankState) -> jnp.ndarray:
         if not bank.buf.shape[0]:
             return jnp.zeros(())
-        f = bank.valid.sum().astype(jnp.float32)
+        f = bank.valid.sum().astype(STATS_DTYPE)
         # shard-local fills differ across devices mid-warm-up (low ring slots
         # fill first); psum to the replicated global fill
         return ctx.psum(f) if sharded_banks and ctx is not None else f

@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import numpy as np
 

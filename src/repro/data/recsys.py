@@ -4,7 +4,7 @@ training losses actually decrease and AUC-style checks are meaningful."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -21,7 +21,7 @@ in tests/test_sharding.py.
 from __future__ import annotations
 
 import re
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -15,7 +15,6 @@ TBE-style batching (multiple rows per step, row blocks) is a documented
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -21,9 +21,7 @@ elements contribute zero (recorded in ``static_info['padded']``).
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

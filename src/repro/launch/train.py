@@ -55,7 +55,6 @@ def tiny_bert(vocab: int = 1000) -> BertConfig:
         d_ff=128,
         vocab_size=vocab,
         max_position=64,
-        dtype=jnp.float32,
     )
 
 

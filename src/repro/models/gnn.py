@@ -22,6 +22,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import STATS_DTYPE
 from repro.models.layers import dense_init, shifted_softplus
 
 
@@ -96,7 +97,12 @@ def rbf_expand(dist: jnp.ndarray, cfg: SchNetConfig) -> jnp.ndarray:
 
 
 def _apply_dense(p, x):
-    return x @ p["w"] + p["b"]
+    # params are stored in param_dtype (fp32 masters) and cast to the
+    # activation dtype at application — same convention as bert.with_policy.
+    # Without the cast, fp32 params promote every bf16 activation back to
+    # fp32: the interaction scan then fails (carry dtype mismatch) and bf16
+    # compute is silently a no-op everywhere else.
+    return x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
 
 
 def schnet_node_repr(params, cfg: SchNetConfig, g: GraphBatch) -> jnp.ndarray:
@@ -117,7 +123,11 @@ def schnet_node_repr(params, cfg: SchNetConfig, g: GraphBatch) -> jnp.ndarray:
         w = shifted_softplus(_apply_dense(lp["filt1"], rbf))
         w = _apply_dense(lp["filt2"], w)                                  # (E, h)
         msg = xj * w * emask
-        agg = jax.ops.segment_sum(msg, g.dst, num_segments=n_nodes)       # (N, h)
+        # fp32 island: per-node message aggregation sums over node degree —
+        # accumulate in fp32 like the attention softmax, identity under fp32
+        agg = jax.ops.segment_sum(
+            msg.astype(jnp.float32), g.dst, num_segments=n_nodes
+        ).astype(x.dtype)                                                 # (N, h)
         y = shifted_softplus(_apply_dense(lp["out_lin1"], agg))
         y = _apply_dense(lp["out_lin2"], y)
         return x + y, None
@@ -152,8 +162,13 @@ def schnet_node_logits(params, cfg: SchNetConfig, g: GraphBatch) -> jnp.ndarray:
 def schnet_loss(params, cfg: SchNetConfig, g: GraphBatch):
     """MSE (energy) or masked cross-entropy (node classification)."""
     if cfg.n_classes is None:
-        pred = schnet_energy(params, cfg, g)
-        loss = jnp.mean((pred - g.targets) ** 2)
+        # cast BEFORE the reduction (fp32-stats contract, core/precision.py):
+        # with bf16 compute and bf16 targets the squared error and its mean
+        # would otherwise reduce in bf16 — the xent branch below always did
+        # this; the MSE branch only survived because the shape-cell driver
+        # happens to hand fp32 targets in
+        pred = schnet_energy(params, cfg, g).astype(STATS_DTYPE)
+        loss = jnp.mean((pred - g.targets.astype(STATS_DTYPE)) ** 2)
         return loss, {"mse": loss}
     logits = schnet_node_logits(params, cfg, g).astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)

@@ -17,8 +17,7 @@ Three entry points per the assigned shape cells:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +43,9 @@ class LMConfig:
     norm_eps: float = 1e-6
     moe: Optional[MoEConfig] = None
     # execution
-    dtype: Any = jnp.bfloat16             # activation/compute dtype
+    # per-arch declaration: LM towers default to bf16 compute (the presets in
+    # configs/ override per size); resolve_precision turns this into a policy
+    dtype: Any = jnp.bfloat16  # reprolint: disable=RPL001
     param_dtype: Any = jnp.float32
     attention_impl: str = "chunked"
     q_chunk: int = 512

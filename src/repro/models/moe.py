@@ -16,12 +16,12 @@ which is one of the §Perf hillclimb levers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, swiglu
+from repro.models.layers import swiglu
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,10 +8,8 @@ The paper's retriever is two BERTs ([CLS] pooling); the LM-retriever variant
 
 from __future__ import annotations
 
-from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.precision import apply_compute_dtype
 from repro.core.types import DualEncoder

@@ -9,7 +9,7 @@ global-norm clip 2.0, linear warmup + linear decay.
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp

@@ -29,6 +29,8 @@ from typing import Any, Callable, List, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import resolve_precision
+
 
 class IndexStore(NamedTuple):
     """Encoded corpus in its global layout.
@@ -87,7 +89,7 @@ def build_index_store(
     passages: np.ndarray,
     *,
     batch: int = 256,
-    dtype: Any = jnp.float32,
+    dtype: Any = None,
     shards: int = 1,
 ) -> IndexStore:
     """Host-side index build: encode, cast to the index dtype, pad rows to a
@@ -98,7 +100,10 @@ def build_index_store(
     at the scales the sharded layout targets it would not fit. Placement
     (replicated device array or one device_put straight into the sharded
     layout, each device pulling only its rows/D block) is the Retriever's
-    job (retriever.build_index)."""
+    job (retriever.build_index). ``dtype=None`` stores at the default
+    policy's bank dtype (fp32); pass ``policy.bank_dtype`` to match a run."""
+    if dtype is None:
+        dtype = resolve_precision(None).bank_dtype
     reps = encode_corpus(encode_passage, passages, batch=batch)
     n = reps.shape[0]
     rows = ((n + shards - 1) // shards) * shards

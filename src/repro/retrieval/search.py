@@ -33,6 +33,7 @@ from typing import Optional, Protocol, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import SCORE_DTYPE
 from repro.kernels.fused_infonce.fused_infonce import NEG_INF
 
 
@@ -96,7 +97,7 @@ class DenseSearchBackend:
             return (top_s, jnp.take_along_axis(cat_i, pos, axis=1)), None
 
         init = (
-            jnp.full((q, k), NEG_INF, jnp.float32),
+            jnp.full((q, k), NEG_INF, SCORE_DTYPE),
             jnp.full((q, k), -1, jnp.int32),
         )
         offsets = jnp.arange(n_blocks, dtype=jnp.int32) * block

@@ -11,12 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (
-    ContrastiveConfig,
-    RetrievalBatch,
-    init_state,
-    make_update_fn,
-)
+from repro.core import ContrastiveConfig, init_state, make_update_fn
 from repro.core.loss import contrastive_step_loss
 from repro.optim import adamw, chain, clip_by_global_norm, sgd
 

@@ -12,7 +12,7 @@ import pytest
 
 from repro.core.infonce import extended_loss, in_batch_loss, info_nce
 from repro.core.loss import contrastive_step_loss
-from repro.core.memory_bank import BankState, init_bank, push
+from repro.core.memory_bank import init_bank, push
 
 
 def _rand(key, *shape):

@@ -191,6 +191,36 @@ def test_schnet_molecule_energy():
     assert all(np.all(np.isfinite(np.asarray(x))) for x in jax.tree_util.tree_leaves(g))
 
 
+def test_schnet_mse_loss_reduces_in_fp32():
+    """fp32-stats contract: the MSE statistic must reduce in fp32 even when
+    both the energy prediction and the targets arrive in bf16 (regression —
+    the loss used to inherit bf16 from its operands)."""
+    cfg = SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=20, dtype=jnp.bfloat16)
+    params = init_schnet(jax.random.PRNGKey(0), cfg)
+    n, e, g_count = 12, 24, 3
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    batch = GraphBatch(
+        nodes=jax.random.randint(ks[0], (n,), 1, 10),
+        src=jax.random.randint(ks[1], (e,), 0, n),
+        dst=jax.random.randint(ks[2], (e,), 0, n),
+        edge_dist=jax.random.uniform(ks[3], (e,), minval=0.5, maxval=9.0),
+        node_mask=jnp.ones((n,), bool),
+        edge_mask=jnp.ones((e,), bool),
+        graph_id=jnp.repeat(jnp.arange(g_count), n // g_count),
+        n_graphs=g_count,
+        targets=jnp.array([1.0, -1.0, 0.5], jnp.bfloat16),
+    )
+    loss, aux = jax.jit(lambda p: schnet_loss(p, cfg, batch))(params)
+    assert loss.dtype == jnp.float32
+    assert aux["mse"].dtype == jnp.float32
+    # and the value matches an fp32 reduction of the same bf16 inputs exactly
+    from repro.models.gnn import schnet_energy
+
+    pred = np.asarray(schnet_energy(params, cfg, batch), np.float32)
+    tgt = np.asarray(batch.targets, np.float32)
+    np.testing.assert_allclose(float(loss), np.mean((pred - tgt) ** 2), rtol=1e-6)
+
+
 def test_schnet_node_classification_with_mask():
     cfg = SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=20, d_feat=8, n_classes=5)
     params = init_schnet(jax.random.PRNGKey(0), cfg)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.moe import MoEConfig, _capacity, init_moe, moe_ffn
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
 
 
 def _setup(seed=0, t=64, d=16, e=8, k=2, f=32, g=16):

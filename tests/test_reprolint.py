@@ -1,0 +1,454 @@
+"""reprolint: one known-good + one seeded-violation fixture per rule,
+suppression/whitelist mechanics, and a smoke run over the real tree.
+
+Fixtures are written to tmp_path so every assertion is about exact rule IDs
+and line numbers — the linter's contract is *where* it fires, not just that
+it fires.
+"""
+
+import sys
+import textwrap
+from pathlib import Path
+
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.reprolint import run_reprolint  # noqa: E402
+from tools.reprolint.whitelist import WhitelistEntry  # noqa: E402
+
+
+def lint(tmp_path, files, *, rules=None, whitelist=(), axes=("data", "model")):
+    """Write ``files`` (relpath -> source) under tmp_path and lint them all."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    (tmp_path / "ROADMAP.md").touch()  # root marker for relpath computation
+    return run_reprolint(
+        [str(tmp_path)],
+        root=str(tmp_path),
+        tests_dir=str(tmp_path / "tests"),
+        extra_axes=list(axes),
+        whitelist=list(whitelist),
+        rules=rules,
+    )
+
+
+def only(result, rule):
+    assert all(v.rule == rule for v in result.violations), result.format()
+    return result.violations
+
+
+# ---------------------------------------------------------------- RPL001
+
+
+def test_dtype_literal_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/box.py": """\
+            import jax.numpy as jnp
+
+
+            def f(x):
+                y = x.astype(jnp.bfloat16)
+                return jnp.zeros((3,), dtype="float32") + y
+            """
+        },
+        rules=["RPL001"],
+    )
+    vs = only(res, "RPL001")
+    assert [(v.line, v.get("dtype")) for v in vs] == [
+        (5, "bfloat16"),
+        (6, "float32"),
+    ]
+
+
+def test_dtype_literal_good(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            # the owner module may spell dtypes; elsewhere the fp32
+            # accumulation pin and policy-routed dtypes are clean
+            "src/core/precision.py": """\
+            import jax.numpy as jnp
+
+            STATS_DTYPE = jnp.float32
+            """,
+            "src/ok.py": """\
+            import jax.numpy as jnp
+            from core.precision import STATS_DTYPE
+
+
+            def f(a, b, policy):
+                acc = jnp.einsum("md,nd->mn", a, b, preferred_element_type=jnp.float32)
+                return acc.astype(STATS_DTYPE), a.astype(policy.compute_dtype)
+            """,
+        },
+        rules=["RPL001"],
+    )
+    assert res.ok, res.format()
+
+
+# ---------------------------------------------------------------- RPL002
+
+
+def test_collective_axis_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/mesh.py": """\
+            import jax
+
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            """,
+            "src/coll.py": """\
+            import jax
+
+
+            def f(x):
+                y = jax.lax.psum(x, "dp")
+                return jax.lax.all_gather(y, axis_name="rows")
+            """,
+        },
+        rules=["RPL002"],
+        axes=(),
+    )
+    vs = only(res, "RPL002")
+    assert [(v.line, v.get("axis")) for v in vs] == [(5, "dp"), (6, "rows")]
+
+
+def test_collective_axis_good(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/mesh.py": """\
+            import jax
+
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            """,
+            "src/coll.py": """\
+            import jax
+            from jax.sharding import PartitionSpec as P
+
+
+            def f(x, axis):
+                spec = P("data", "model")
+                return jax.lax.psum(x, axis), jax.lax.pmean(x, "data"), spec
+            """,
+        },
+        rules=["RPL002"],
+        axes=(),
+    )
+    assert res.ok, res.format()
+
+
+# ---------------------------------------------------------------- RPL003
+
+_KERNEL_OK = {
+    "src/kernels/addone/addone.py": """\
+    from jax.experimental import pallas as pl
+
+
+    def _kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + 1
+
+
+    def addone(x):
+        return pl.pallas_call(_kernel, out_shape=x)(x)
+    """,
+    "src/kernels/addone/ref.py": """\
+    def addone_ref(x):
+        return x + 1
+    """,
+    "tests/test_addone.py": """\
+    # parity test for addone kernel-vs-ref
+    """,
+}
+
+
+def test_pallas_registry_good(tmp_path):
+    res = lint(tmp_path, dict(_KERNEL_OK), rules=["RPL003"])
+    assert res.ok, res.format()
+
+
+def test_pallas_registry_fires_outside_registry(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/stray.py": """\
+            from jax.experimental import pallas as pl
+
+
+            def f(x):
+                return pl.pallas_call(lambda x_ref, o_ref: None, out_shape=x)(x)
+            """
+        },
+        rules=["RPL003"],
+    )
+    vs = only(res, "RPL003")
+    assert [v.line for v in vs] == [5]
+    assert "outside the kernel registry" in vs[0].message
+
+
+def test_pallas_registry_fires_missing_ref_and_test(tmp_path):
+    files = {k: v for k, v in _KERNEL_OK.items() if "ref.py" not in k}
+    files["tests/test_addone.py"] = "# no kernel name mentioned here\n"
+    res = lint(tmp_path, files, rules=["RPL003"])
+    vs = only(res, "RPL003")
+    msgs = "\n".join(v.message for v in vs)
+    assert "no ref.py" in msgs and "parity test" in msgs
+
+
+# ---------------------------------------------------------------- RPL004
+
+
+def test_pallas_closure_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/kernels/scaled/scaled.py": """\
+            from jax.experimental import pallas as pl
+
+
+            def build(x, scale: float):
+                def _kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] * scale
+                return pl.pallas_call(_kernel, out_shape=x)(x)
+            """
+        },
+        rules=["RPL004"],
+    )
+    vs = only(res, "RPL004")
+    assert [(v.line, v.get("name")) for v in vs] == [(6, "scale")]
+
+
+def test_pallas_closure_good_partial_binding(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/kernels/scaled/scaled.py": """\
+            from functools import partial
+
+            from jax.experimental import pallas as pl
+
+
+            def _kernel(x_ref, o_ref, *, scale):
+                o_ref[...] = x_ref[...] * scale
+
+
+            def build(x, scale: float):
+                return pl.pallas_call(partial(_kernel, scale=scale), out_shape=x)(x)
+            """
+        },
+        rules=["RPL004"],
+    )
+    assert res.ok, res.format()
+
+
+# ---------------------------------------------------------------- RPL005
+
+
+def test_jit_hazard_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/jitted.py": """\
+            import jax
+
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    print("positive", x)
+                return x
+
+
+            def g(y):
+                while y.sum() > 1:
+                    y = y * 0.5
+                return y
+
+
+            g_fast = jax.jit(g)
+            """
+        },
+        rules=["RPL005"],
+    )
+    vs = only(res, "RPL005")
+    assert [v.line for v in vs] == [6, 7, 12]
+    assert "lax.cond" in vs[0].message
+    assert "trace time" in vs[1].message
+
+
+def test_jit_hazard_good_static_and_shape(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/jitted.py": """\
+            from functools import partial
+
+            import jax
+
+
+            @partial(jax.jit, static_argnames=("n",))
+            def f(x, n):
+                if n > 4:
+                    x = x + 1
+                if x.shape[0] > 2:
+                    x = x * 2
+                if x is None:
+                    return 0
+                return x
+            """
+        },
+        rules=["RPL005"],
+    )
+    assert res.ok, res.format()
+
+
+# ---------------------------------------------------------------- RPL006
+
+
+def test_stats_dtype_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/stats.py": """\
+            import jax.numpy as jnp
+
+
+            def metrics(x, policy):
+                loss = jnp.mean(x.astype(policy.compute_dtype))
+                acc = jnp.sum(x.astype(jnp.bfloat16)) / x.shape[0]
+                return loss, acc
+            """
+        },
+        rules=["RPL006"],
+    )
+    vs = only(res, "RPL006")
+    assert [(v.line, v.get("stat")) for v in vs] == [(5, "loss"), (6, "acc")]
+
+
+def test_stats_dtype_good(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/stats.py": """\
+            import jax.numpy as jnp
+
+            STATS_DTYPE = jnp.float32
+
+
+            def metrics(x, y, policy):
+                loss = jnp.mean(x.astype(STATS_DTYPE))
+                hidden = jnp.mean(y.astype(policy.compute_dtype))  # not a stat
+                return loss, hidden
+            """
+        },
+        rules=["RPL006"],
+    )
+    assert res.ok, res.format()
+
+
+# ------------------------------------------------------- suppressions
+
+
+def test_inline_suppression(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/box.py": """\
+            import jax.numpy as jnp
+
+            A = jnp.zeros((3,), jnp.bfloat16)  # reprolint: disable=RPL001
+            B = jnp.zeros((3,), jnp.bfloat16)
+            """
+        },
+        rules=["RPL001"],
+    )
+    assert [v.line for v in res.violations] == [4]
+    assert res.suppressed == 1
+
+
+def test_file_suppression_only_in_header(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/box.py": """\
+            # reprolint: disable-file=RPL001
+            import jax.numpy as jnp
+
+            A = jnp.zeros((3,), jnp.bfloat16)
+            """
+        },
+        rules=["RPL001"],
+    )
+    assert res.ok and res.suppressed == 1
+    # the same pragma past the header window is inert
+    res2 = lint(
+        tmp_path,
+        {
+            "src/late.py": "\n" * 20
+            + textwrap.dedent(
+                """\
+                # reprolint: disable-file=RPL001
+                import jax.numpy as jnp
+
+                A = jnp.zeros((3,), jnp.bfloat16)
+                """
+            )
+        },
+        rules=["RPL001"],
+    )
+    assert not res2.ok
+
+
+# ---------------------------------------------------------- whitelist
+
+
+def test_whitelist_is_dtype_scoped(tmp_path):
+    files = {
+        "src/opt.py": """\
+        import jax.numpy as jnp
+
+        M = jnp.zeros((3,), jnp.float32)
+        V = jnp.zeros((3,), jnp.bfloat16)
+        """
+    }
+    entry = WhitelistEntry(
+        pattern="src/opt.py",
+        rules=("RPL001",),
+        reason="fp32 masters",
+        dtypes=frozenset({"float32"}),
+    )
+    res = lint(tmp_path, files, rules=["RPL001"], whitelist=[entry])
+    # fp32 absorbed by the entry; the bf16 literal still fails
+    assert [(v.line, v.get("dtype")) for v in res.violations] == [(4, "bfloat16")]
+    assert res.whitelisted == 1
+
+
+# ---------------------------------------------------------- real tree
+
+
+def test_real_tree_is_clean():
+    res = run_reprolint(
+        [str(REPO_ROOT / "src"), str(REPO_ROOT / "tools")],
+        root=str(REPO_ROOT),
+        tests_dir=str(REPO_ROOT / "tests"),
+    )
+    assert res.ok, res.format()
+
+
+def test_real_tree_mesh_axes_are_discovered():
+    # the declared axes come from launch/mesh.py + debug meshes; if this
+    # breaks, RPL002 has lost its ground truth and every axis would flag
+    res = run_reprolint(
+        [str(REPO_ROOT / "src")],
+        root=str(REPO_ROOT),
+        tests_dir=str(REPO_ROOT / "tests"),
+        rules=["RPL002"],
+    )
+    assert res.ok, res.format()

@@ -4,7 +4,6 @@ ties, k > n, masking), BatchingServer coalescing/padding/flush semantics
 sharded-vs-replicated index parity on 8 host devices, and the end-to-end
 trained-checkpoint -> serve -> recall smoke."""
 
-import queue
 import subprocess
 import sys
 import textwrap
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data.retrieval import SyntheticRetrievalCorpus
 from repro.kernels.fused_topk.ops import fused_topk_scores
 from repro.kernels.fused_topk.ref import topk_scores_ref
 from repro.retrieval import (

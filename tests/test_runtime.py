@@ -2,8 +2,6 @@
 injection, straggler watchdog, preemption), elastic resharding, and the
 dynamic-batching retrieval server."""
 
-import queue
-import threading
 import time
 
 import jax
@@ -11,15 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpoint import save_checkpoint
 from repro.core.memory_bank import init_bank, push
 from repro.data.loader import LoaderState, ShardedLoader
-from repro.distribution.elastic import (
-    MeshPlan,
-    bank_to_arrays,
-    plan_resize,
-    reshard_bank,
-)
+from repro.distribution.elastic import bank_to_arrays, plan_resize, reshard_bank
 from repro.runtime.server import BatchingServer, blocked_topk_scores
 from repro.runtime.trainer import StepFailure, Trainer, TrainerConfig
 

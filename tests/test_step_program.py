@@ -11,13 +11,10 @@
     reduce to DPR when the banks are empty.
 """
 
-import dataclasses
 import importlib.util
 import os
-import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,42 @@
+"""reprolint: repo-invariant static analysis for the repro codebase.
+
+The runtime test suites pin this repo's hard invariants (fp32 stats, the
+PrecisionPolicy dtype ownership, mesh-axis-named collectives, the Pallas
+kernel registry discipline) — but only for the code paths a 3-step
+trajectory test happens to execute. reprolint checks the same invariants
+*statically*, over every file, at lint time:
+
+  RPL001  dtype-literal containment — bare float dtype literals
+          (``jnp.float32``/``jnp.bfloat16``/...) are legal only in
+          ``core/precision.py`` and the documented whitelist; everything
+          else routes dtype decisions through the PrecisionPolicy.
+  RPL002  collective-axis validation — axis names in ``psum``/``pmean``/
+          ``all_gather``/``ppermute``/``psum_scatter``/``axis_index`` and in
+          ``PartitionSpec``/``shard_map`` specs must be mesh axes actually
+          declared (``launch/mesh.py`` / ``Mesh``/``make_mesh`` call sites).
+  RPL003  Pallas kernel registry — every ``pl.pallas_call`` site lives under
+          ``kernels/<name>/`` with a sibling ``ref.py`` and a parity test in
+          ``tests/`` that references the kernel by name.
+  RPL004  Pallas float closure — kernel bodies must not close over Python
+          float locals of the builder (pass them as explicit
+          ``functools.partial`` bindings or operands instead).
+  RPL005  jit hazards — Python ``if``/``while`` on traced arguments, host
+          side effects (``print``/``open``/``np.random``/wall-clock), and
+          ``global``/``nonlocal`` mutation inside jitted / shard_mapped
+          functions.
+  RPL006  fp32-stats contract — loss/accuracy/fill statistics must not be
+          reduced in a non-fp32 dtype (the LossBackend accum-dtype contract).
+
+Run ``python -m tools.reprolint src/`` (CI runs it in the static-analysis
+job). Suppress a single line with ``# reprolint: disable=RPL001`` (comma
+for several rules), a whole file with ``# reprolint: disable-file=RPL001``
+in its first 15 lines; repo-wide exemptions live in
+``tools/reprolint/whitelist.py`` and each carries a written justification.
+"""
+
+from tools.reprolint.engine import (  # noqa: F401  (public API)
+    LintResult,
+    Violation,
+    iter_rules,
+    run_reprolint,
+)

@@ -1,0 +1,81 @@
+"""CLI: ``python -m tools.reprolint src/ [tools/ tests/ ...]``.
+
+Exit status 0 when the tree is clean (after inline suppressions and the
+documented whitelist), 1 when violations or parse errors remain, 2 on bad
+usage. ``--no-whitelist`` shows what the whitelist is absorbing;
+``--explain-whitelist`` prints each entry with its justification.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.reprolint.engine import iter_rules, run_reprolint
+from tools.reprolint.whitelist import WHITELIST
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-invariant static analysis (dtype contracts, "
+        "collective axes, Pallas kernel discipline, jit hazards)",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--root", help="repo root (default: auto-detect)")
+    ap.add_argument(
+        "--tests-dir", help="tests directory for RPL003 parity-test checks"
+    )
+    ap.add_argument(
+        "--mesh-axes",
+        default="",
+        help="comma-separated extra mesh axes to treat as declared "
+        "(for targeted runs that do not scan the mesh-building modules)",
+    )
+    ap.add_argument(
+        "--rules", default="", help="comma-separated rule ids to run (default all)"
+    )
+    ap.add_argument(
+        "--no-whitelist",
+        action="store_true",
+        help="report whitelisted violations too",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="list rules and exit"
+    )
+    ap.add_argument(
+        "--explain-whitelist",
+        action="store_true",
+        help="print whitelist entries with justifications and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in iter_rules():
+            print(f"{rule.rule_id}  {rule.name:<22} {rule.doc}")
+        return 0
+    if args.explain_whitelist:
+        for e in WHITELIST:
+            dts = ",".join(sorted(e.dtypes)) if e.dtypes else "any"
+            print(f"{e.pattern}  [{', '.join(e.rules)}] dtypes={dts}")
+            print(f"    {e.reason}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given", file=sys.stderr)
+        return 2
+
+    result = run_reprolint(
+        args.paths,
+        root=args.root,
+        tests_dir=args.tests_dir,
+        extra_axes=[a.strip() for a in args.mesh_axes.split(",") if a.strip()],
+        use_whitelist=not args.no_whitelist,
+        rules=[r.strip() for r in args.rules.split(",") if r.strip()] or None,
+    )
+    print(result.format())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Small AST helpers shared by the rules (stdlib ``ast`` only)."""
+
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import List, Optional, Set
+
+#: float dtype attribute names the dtype rules recognize as "precision
+#: decisions" (int dtypes — labels, ids, ring heads — are not policy-owned)
+FLOAT_DTYPE_ATTRS = {"float32", "bfloat16", "float16", "float64", "double", "half"}
+
+#: module spellings a dtype attribute may hang off
+DTYPE_MODULES = {"jnp", "np", "numpy", "jax.numpy", "ml_dtypes", "mldtypes"}
+
+BUILTIN_NAMES: Set[str] = set(dir(builtins))
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.lax.psum' for nested Attribute/Name chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """The rightmost name of a call target: psum for jax.lax.psum(...)."""
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+def float_dtype_name(node: ast.AST) -> Optional[str]:
+    """'float32' if ``node`` is a float dtype literal (``jnp.float32``,
+    ``np.bfloat16``, ``jnp.float8_e4m3fn``, ...), else None."""
+    if isinstance(node, ast.Attribute):
+        attr = node.attr
+        if attr in FLOAT_DTYPE_ATTRS or attr.startswith("float8_"):
+            base = dotted_name(node.value)
+            if base is not None and (base in DTYPE_MODULES or base.endswith(".numpy")):
+                return attr
+    return None
+
+
+def string_elems(node: ast.AST) -> List[str]:
+    """String constants inside a Constant/Tuple/List (axis-name shapes)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            out.extend(string_elems(elt))
+        return out
+    return []
+
+
+def module_level_names(tree: ast.Module) -> Set[str]:
+    """Names bound at module scope: imports, defs, classes, assignments."""
+    names: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        names.add(sub.id)
+    return names
+
+
+def function_param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def bound_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names assigned anywhere inside ``fn`` (incl. params, for-targets,
+    with-targets, comprehension targets, nested defs)."""
+    names: Set[str] = set(function_param_names(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    return names
+
+
+def is_float_constant_expr(node: ast.AST) -> bool:
+    """A Python-float compile-time constant: 0.125, 1.0 / 8, d ** -0.5 is NOT
+    (names involved) — only literal arithmetic counts."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.UnaryOp):
+        return is_float_constant_expr(node.operand)
+    if isinstance(node, ast.BinOp):
+        sides = (node.left, node.right)
+        if all(
+            isinstance(s, ast.Constant) and isinstance(s.value, (int, float))
+            for s in sides
+        ):
+            return any(isinstance(s.value, float) for s in sides) or isinstance(
+                node.op, ast.Div
+            )
+    return False

@@ -1,0 +1,300 @@
+"""Rule engine: file collection, suppression comments, whitelist, reporting.
+
+The engine is deliberately stdlib-only (``ast`` + ``tokenize``): it must run
+in every environment the repo does, including the CI static-analysis job and
+bare containers without the dev extras.
+
+Flow: collect ``*.py`` files -> parse each into a ``FileContext`` (AST,
+parent links, suppression table) -> build the ``RepoContext`` (declared mesh
+axes, tests corpus) -> run every registered rule -> drop violations covered
+by an inline suppression or a whitelist entry -> report.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: rules may suppress with ``# reprolint: disable=RPL001`` (same line) or
+#: ``# reprolint: disable-file=RPL001,RPL002`` (first _FILE_SCOPE_LINES lines)
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*(disable-file|disable)\s*=\s*([A-Za-z0-9_*,\s]+)"
+)
+_FILE_SCOPE_LINES = 15
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: ``path:line:col: rule message``. ``data`` carries
+    rule-specific details the whitelist can scope on (e.g. the dtype name
+    for RPL001)."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    data: Tuple[Tuple[str, str], ...] = ()
+
+    def get(self, key: str) -> Optional[str]:
+        for k, v in self.data:
+            if k == key:
+                return v
+        return None
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """One parsed source file plus the lookups every rule needs."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.parents: Dict[int, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[id(child)] = parent
+        self.line_suppressions: Dict[int, Set[str]] = {}
+        self.file_suppressions: Set[str] = set()
+        self._collect_suppressions()
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def _collect_suppressions(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            comments = [
+                (t.start[0], t.string) for t in tokens if t.type == tokenize.COMMENT
+            ]
+        except tokenize.TokenizeError:  # pragma: no cover - ast already parsed
+            comments = []
+        for line, text in comments:
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            scope, rules = m.groups()
+            ids = {r.strip() for r in rules.split(",") if r.strip()}
+            if scope == "disable-file":
+                if line <= _FILE_SCOPE_LINES:
+                    self.file_suppressions |= ids
+            else:
+                self.line_suppressions.setdefault(line, set()).update(ids)
+
+    def suppressed(self, violation: Violation) -> bool:
+        if {"*", violation.rule} & self.file_suppressions:
+            return True
+        at_line = self.line_suppressions.get(violation.line, set())
+        return bool({"*", violation.rule} & at_line)
+
+
+class RepoContext:
+    """Cross-file facts: the declared mesh axes and the tests corpus."""
+
+    def __init__(
+        self,
+        root: Path,
+        files: Sequence[FileContext],
+        tests_dir: Optional[Path],
+        extra_axes: Sequence[str] = (),
+    ):
+        self.root = root
+        self.files = list(files)
+        self.tests_dir = tests_dir
+        self.mesh_axes: Set[str] = set(extra_axes)
+        for fc in self.files:
+            self.mesh_axes |= _declared_mesh_axes(fc.tree)
+        self.tests_text = ""
+        if tests_dir is not None and tests_dir.is_dir():
+            self.tests_text = "\n".join(
+                p.read_text(encoding="utf-8", errors="replace")
+                for p in sorted(tests_dir.rglob("*.py"))
+            )
+
+
+def _string_elems(node: ast.AST) -> List[str]:
+    """String constants inside a Constant/Tuple/List node (axis-name shapes)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            out.extend(_string_elems(elt))
+        return out
+    return []
+
+
+def _declared_mesh_axes(tree: ast.Module) -> Set[str]:
+    """Axis names declared by ``jax.make_mesh(shape, axes)`` / ``Mesh(devs,
+    axes)`` literal tuples anywhere in the file. These calls are the ground
+    truth RPL002 validates every axis string against."""
+    axes: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node.func)
+        if name == "make_mesh":
+            target = None
+            if len(node.args) >= 2:
+                target = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "axis_names":
+                    target = kw.value
+            if target is not None:
+                axes |= set(_string_elems(target))
+        elif name == "Mesh" and len(node.args) >= 2:
+            axes |= set(_string_elems(node.args[1]))
+    return axes
+
+
+def _call_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: List[Violation]
+    files_scanned: int
+    suppressed: int
+    whitelisted: int
+    parse_errors: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.parse_errors
+
+    def format(self) -> str:
+        lines = [v.format() for v in self.violations]
+        lines.extend(f"parse error: {e}" for e in self.parse_errors)
+        lines.append(
+            f"reprolint: {self.files_scanned} files, "
+            f"{len(self.violations)} violations "
+            f"({self.suppressed} suppressed inline, "
+            f"{self.whitelisted} whitelisted)"
+        )
+        return "\n".join(lines)
+
+
+def iter_rules():
+    """All registered rules (imported lazily: rules import this module)."""
+    from tools.reprolint.rules import ALL_RULES
+
+    return list(ALL_RULES)
+
+
+def _collect_files(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(
+                f for f in sorted(p.rglob("*.py")) if "__pycache__" not in f.parts
+            )
+        elif p.suffix == ".py":
+            out.append(p)
+    seen: Set[Path] = set()
+    unique = []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            unique.append(f)
+    return unique
+
+
+def _find_root(paths: Sequence[Path]) -> Path:
+    """Nearest ancestor of the first path that looks like the repo root."""
+    start = paths[0].resolve()
+    cur = start if start.is_dir() else start.parent
+    for cand in [cur, *cur.parents]:
+        if any((cand / marker).exists() for marker in (".git", "pytest.ini", "ROADMAP.md")):
+            return cand
+    return cur
+
+
+def run_reprolint(
+    paths: Sequence[str],
+    *,
+    root: Optional[str] = None,
+    tests_dir: Optional[str] = None,
+    extra_axes: Sequence[str] = (),
+    whitelist: Optional[Sequence[Any]] = None,
+    use_whitelist: bool = True,
+    rules: Optional[Sequence[str]] = None,
+) -> LintResult:
+    """Lint ``paths`` (files or directories) and return the filtered result.
+
+    ``whitelist=None`` uses the repo whitelist (tools/reprolint/whitelist.py)
+    when ``use_whitelist`` is set; pass an explicit list to scope tests.
+    ``rules`` restricts to a subset of rule ids.
+    """
+    from tools.reprolint.whitelist import WHITELIST, whitelist_covers
+
+    path_objs = [Path(p) for p in paths]
+    root_path = Path(root).resolve() if root else _find_root(path_objs)
+    tdir = Path(tests_dir) if tests_dir else root_path / "tests"
+
+    files: List[FileContext] = []
+    parse_errors: List[str] = []
+    for f in _collect_files(path_objs):
+        try:
+            rel = f.resolve().relative_to(root_path).as_posix()
+        except ValueError:
+            rel = f.resolve().as_posix()
+        try:
+            files.append(FileContext(f, rel, f.read_text(encoding="utf-8")))
+        except SyntaxError as e:
+            parse_errors.append(f"{rel}:{e.lineno}: {e.msg}")
+
+    repo = RepoContext(root_path, files, tdir if tdir.is_dir() else None, extra_axes)
+
+    active = iter_rules()
+    if rules is not None:
+        wanted = set(rules)
+        active = [r for r in active if r.rule_id in wanted]
+
+    entries = WHITELIST if whitelist is None else list(whitelist)
+    raw: List[Violation] = []
+    for fc in files:
+        for rule in active:
+            raw.extend(rule.check(fc, repo))
+
+    kept: List[Violation] = []
+    n_suppressed = 0
+    n_whitelisted = 0
+    by_path = {fc.relpath: fc for fc in files}
+    for v in sorted(raw, key=lambda v: (v.path, v.line, v.col, v.rule)):
+        fc = by_path[v.path]
+        if fc.suppressed(v):
+            n_suppressed += 1
+            continue
+        if use_whitelist and whitelist_covers(entries, v):
+            n_whitelisted += 1
+            continue
+        kept.append(v)
+
+    return LintResult(
+        violations=kept,
+        files_scanned=len(files),
+        suppressed=n_suppressed,
+        whitelisted=n_whitelisted,
+        parse_errors=parse_errors,
+    )

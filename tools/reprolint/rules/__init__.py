@@ -1,0 +1,19 @@
+"""Rule registry. Each rule object exposes ``rule_id``, ``name``, ``doc``
+(one-line invariant statement shown by ``--list-rules``) and
+``check(file_ctx, repo_ctx) -> Iterable[Violation]``."""
+
+from tools.reprolint.rules.collectives import CollectiveAxisRule
+from tools.reprolint.rules.dtypes import DtypeLiteralRule, StatsDtypeRule
+from tools.reprolint.rules.jit import JitHazardRule
+from tools.reprolint.rules.pallas import PallasClosureRule, PallasRegistryRule
+
+ALL_RULES = [
+    DtypeLiteralRule(),
+    CollectiveAxisRule(),
+    PallasRegistryRule(),
+    PallasClosureRule(),
+    JitHazardRule(),
+    StatsDtypeRule(),
+]
+
+__all__ = ["ALL_RULES"]

@@ -1,0 +1,96 @@
+"""RPL002 collective-axis validation.
+
+Every named-axis collective (``psum``/``pmean``/``all_gather``/``ppermute``/
+``psum_scatter``/``axis_index``/...) and every ``PartitionSpec`` literal must
+name a mesh axis that is actually *declared* somewhere in the scanned tree —
+``jax.make_mesh(shape, axes)`` / ``Mesh(devices, axes)`` call sites
+(``launch/mesh.py`` and the per-driver debug meshes) are the ground truth.
+
+A hardcoded axis string that drifts from the declared set (say ``"dp"``
+after the mesh renamed to ``("data", "model")``) fails *inside* shard_map
+tracing with an opaque XLA error at best, and silently no-ops a reduction at
+worst; this rule catches it at lint time. Axis values that are variables
+(``cfg.dp_axis``) are runtime-validated by jax and skipped here.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.reprolint.astutil import call_name, dotted_name, string_elems
+from tools.reprolint.engine import FileContext, RepoContext, Violation
+
+#: collective -> positional index of its axis-name argument
+_COLLECTIVES = {
+    "psum": 1,
+    "pmean": 1,
+    "pmax": 1,
+    "pmin": 1,
+    "all_gather": 1,
+    "ppermute": 1,
+    "pshuffle": 1,
+    "psum_scatter": 1,
+    "all_to_all": 1,
+    "axis_index": 0,
+    "axis_size": 0,
+}
+
+_SPEC_NAMES = {"P", "PartitionSpec"}
+
+
+class CollectiveAxisRule:
+    rule_id = "RPL002"
+    name = "collective-axis"
+    doc = (
+        "collective axis names and PartitionSpec literals must be mesh axes "
+        "declared by a make_mesh/Mesh call site in the scanned tree"
+    )
+
+    def check(self, fc: FileContext, repo: RepoContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(fc.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in _COLLECTIVES:
+                # guard against unrelated same-named methods: require a bare
+                # name (from-import) or a jax/lax-ish attribute chain
+                if isinstance(node.func, ast.Attribute):
+                    base = dotted_name(node.func.value) or ""
+                    if not (base == "lax" or base.endswith(".lax") or base == "jax"):
+                        continue
+                axis_node = None
+                for kw in node.keywords:
+                    if kw.arg == "axis_name":
+                        axis_node = kw.value
+                idx = _COLLECTIVES[name]
+                if axis_node is None and len(node.args) > idx:
+                    axis_node = node.args[idx]
+                if axis_node is not None:
+                    out.extend(self._check_axes(fc, repo, name, axis_node))
+            elif name in _SPEC_NAMES:
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    out.extend(self._check_axes(fc, repo, name, arg))
+        return out
+
+    def _check_axes(
+        self, fc: FileContext, repo: RepoContext, call: str, axis_node: ast.AST
+    ) -> Iterable[Violation]:
+        declared = repo.mesh_axes
+        for axis in string_elems(axis_node):
+            if axis in declared:
+                continue
+            known = ", ".join(sorted(declared)) if declared else "none declared"
+            yield Violation(
+                path=fc.relpath,
+                line=axis_node.lineno,
+                col=axis_node.col_offset,
+                rule=self.rule_id,
+                message=(
+                    f"'{axis}' in {call}(...) is not a declared mesh axis "
+                    f"(declared: {known}; declare it via make_mesh/Mesh or "
+                    "pass --mesh-axes for targeted runs)"
+                ),
+                data=(("axis", axis),),
+            )

@@ -1,0 +1,188 @@
+"""RPL001 dtype-literal containment and RPL006 fp32-stats contract.
+
+The PrecisionPolicy (src/repro/core/precision.py) is the single owner of
+every dtype decision: param/compute/bank/accum. RPL001 keeps it that way
+statically — a bare float dtype literal anywhere else is either a policy
+bypass (fix: route through the policy or the named contract constants
+``STATS_DTYPE``/``MASTER_DTYPE``) or a deliberate, documented exception
+(whitelist). RPL006 guards the sharpest corollary: statistics (loss,
+accuracy, bank fill) must never be *reduced* in a low-precision dtype —
+low-precision inputs only perturb the trajectory, low-precision statistics
+change it (tests/test_precision.py pins the runtime half of this contract).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Set
+
+from tools.reprolint.astutil import call_name, dotted_name, float_dtype_name
+from tools.reprolint.engine import FileContext, RepoContext, Violation
+
+#: the one module allowed to spell dtypes out — it IS the policy
+_OWNER_SUFFIX = "core/precision.py"
+
+_FLOAT_STRINGS = {
+    "float32", "bfloat16", "float16", "float64", "double", "half",
+    "f32", "bf16", "f16", "f64",
+}
+
+#: dtype-literal kwargs that *enforce* fp32 accumulation rather than bypass
+#: the policy: preferred_element_type=jnp.float32 pins MXU/matmul accumulation
+#: to the accum dtype and can never weaken precision — any other float dtype
+#: there is a genuine violation (it would silently accumulate low-precision)
+_ACCUM_KWARG = "preferred_element_type"
+
+
+class DtypeLiteralRule:
+    rule_id = "RPL001"
+    name = "dtype-literal"
+    doc = (
+        "bare float dtype literals are only legal in core/precision.py "
+        "(PrecisionPolicy owns every dtype) and the documented whitelist"
+    )
+
+    def check(self, fc: FileContext, repo: RepoContext) -> Iterable[Violation]:
+        if fc.relpath.endswith(_OWNER_SUFFIX):
+            return []
+        out: List[Violation] = []
+        exempt: Set[int] = set()
+        for node in ast.walk(fc.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg == _ACCUM_KWARG and float_dtype_name(kw.value) == "float32":
+                    exempt.add(id(kw.value))
+                if kw.arg == "dtype" and isinstance(kw.value, ast.Constant):
+                    if str(kw.value.value) in _FLOAT_STRINGS:
+                        out.append(self._violation(fc, kw.value, repr(kw.value.value)))
+        for node in ast.walk(fc.tree):
+            dt = float_dtype_name(node)
+            if dt is None or id(node) in exempt:
+                continue
+            out.append(self._violation(fc, node, f"{dotted_name(node)}", dt))
+        return out
+
+    def _violation(
+        self, fc: FileContext, node: ast.AST, spelled: str, dt: Optional[str] = None
+    ) -> Violation:
+        dt = dt or spelled.strip("'\"")
+        return Violation(
+            path=fc.relpath,
+            line=node.lineno,
+            col=node.col_offset,
+            rule=self.rule_id,
+            message=(
+                f"bare float dtype literal {spelled} — route through the "
+                "PrecisionPolicy / the named contract dtypes in "
+                "core/precision.py, or whitelist with a justification"
+            ),
+            data=(("dtype", dt),),
+        )
+
+
+_STAT_NAME_RE = re.compile(
+    r"(^|_)(loss|losses|acc|accuracy|fill|metric|metrics|stat|stats)(_|$)",
+    re.IGNORECASE,
+)
+
+_REDUCTIONS = {"mean", "sum", "average", "nanmean", "nansum"}
+
+#: policy attributes that may resolve to a low-precision dtype at runtime —
+#: casting a statistic to one of these before reduction breaks the contract
+_SUSPECT_POLICY_ATTRS = {"compute_dtype", "bank_dtype", "param_dtype"}
+
+_LOW_PRECISION = {"bfloat16", "float16", "half"}
+
+
+def _is_reduction(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name in _REDUCTIONS
+
+
+def _bad_cast_target(node: ast.AST) -> Optional[str]:
+    """Why a cast target is non-fp32: a low-precision literal, another
+    array's runtime ``.dtype``, or a policy dtype that may be low-precision.
+    fp32 / accum-dtype casts return None (they are the fix, not the bug)."""
+    dt = float_dtype_name(node)
+    if dt is not None:
+        if dt in _LOW_PRECISION or dt.startswith("float8_"):
+            return f"{dotted_name(node)}"
+        return None  # fp32/fp64 literal cast — fine here, RPL001's business
+    if isinstance(node, ast.Attribute):
+        if node.attr == "dtype":
+            return f"{dotted_name(node) or '<expr>.dtype'}"
+        if node.attr in _SUSPECT_POLICY_ATTRS:
+            return f"{dotted_name(node) or node.attr}"
+    return None
+
+
+class StatsDtypeRule:
+    rule_id = "RPL006"
+    name = "fp32-stats"
+    doc = (
+        "loss/accuracy/fill statistics must not be reduced in a "
+        "non-fp32 dtype (the LossBackend accum-dtype contract)"
+    )
+
+    def check(self, fc: FileContext, repo: RepoContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(fc.tree):
+            for stat_name, expr in self._stat_bindings(node):
+                out.extend(self._check_expr(fc, stat_name, expr))
+        return out
+
+    def _stat_bindings(self, node: ast.AST):
+        """(statistic name, bound expression) pairs: assignments to
+        stats-named targets and stats-named keywords of constructor calls
+        (LossAux(loss=...), StepMetrics(accuracy=...))."""
+        if isinstance(node, ast.Assign) and node.value is not None:
+            for t in node.targets:
+                if isinstance(t, ast.Name) and _STAT_NAME_RE.search(t.id):
+                    yield t.id, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            t = node.target
+            if isinstance(t, ast.Name) and _STAT_NAME_RE.search(t.id):
+                yield t.id, node.value
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg and _STAT_NAME_RE.search(kw.arg):
+                    yield kw.arg, kw.value
+
+    def _check_expr(
+        self, fc: FileContext, stat_name: str, expr: ast.AST
+    ) -> Iterable[Violation]:
+        reductions = [
+            n for n in ast.walk(expr) if isinstance(n, ast.Call) and _is_reduction(n)
+        ]
+        if not reductions:
+            return
+        for sub in ast.walk(expr):
+            bad: Optional[str] = None
+            where = sub
+            if (
+                isinstance(sub, ast.Call)
+                and call_name(sub) == "astype"
+                and sub.args
+            ):
+                bad = _bad_cast_target(sub.args[0])
+            elif isinstance(sub, ast.Call) and _is_reduction(sub):
+                for kw in sub.keywords:
+                    if kw.arg == "dtype":
+                        bad = _bad_cast_target(kw.value)
+                        where = kw.value
+            if bad is not None:
+                yield Violation(
+                    path=fc.relpath,
+                    line=where.lineno,
+                    col=where.col_offset,
+                    rule=self.rule_id,
+                    message=(
+                        f"statistic '{stat_name}' is reduced under a non-fp32 "
+                        f"cast ({bad}) — statistics must be computed in fp32/"
+                        "accum_dtype (cast before the reduction; "
+                        "see core/precision.py STATS_DTYPE)"
+                    ),
+                    data=(("stat", stat_name),),
+                )

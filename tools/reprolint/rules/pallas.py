@@ -1,0 +1,226 @@
+"""RPL003 Pallas kernel registry and RPL004 kernel float-closure.
+
+Kernel discipline in this repo (established by the fused-infonce PR and
+kept by every kernel since): a Pallas kernel lives under
+``src/repro/kernels/<name>/`` with the raw kernel module, an ``ops.py``
+public surface, a ``ref.py`` pure-jnp reference implementation, and a parity
+test in ``tests/`` that exercises kernel-vs-ref (interpret mode off-TPU).
+RPL003 checks the registry statically: a ``pl.pallas_call`` outside that
+layout, without a sibling ``ref.py``, or without any tests file mentioning
+the kernel package name is a violation.
+
+RPL004 guards a subtle correctness/retrace hazard: a kernel body that closes
+over a Python float local of its builder bakes the value into the traced
+kernel — invisibly versioned, retraced per value, and easy to desync from
+the operand it was derived from. Scalars must be bound explicitly
+(``functools.partial(kernel, inv_tau=...)``) or passed as operands.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.reprolint.astutil import (
+    BUILTIN_NAMES,
+    bound_names,
+    call_name,
+    is_float_constant_expr,
+    module_level_names,
+)
+from tools.reprolint.engine import FileContext, RepoContext, Violation
+
+
+def _pallas_calls(fc: FileContext) -> List[ast.Call]:
+    return [
+        n
+        for n in ast.walk(fc.tree)
+        if isinstance(n, ast.Call) and call_name(n) == "pallas_call"
+    ]
+
+
+class PallasRegistryRule:
+    rule_id = "RPL003"
+    name = "pallas-registry"
+    doc = (
+        "every pl.pallas_call lives under kernels/<name>/ with a sibling "
+        "ref.py and a parity test in tests/ referencing the kernel name"
+    )
+
+    def check(self, fc: FileContext, repo: RepoContext) -> Iterable[Violation]:
+        calls = _pallas_calls(fc)
+        if not calls:
+            return []
+        first = min(calls, key=lambda c: c.lineno)
+        out: List[Violation] = []
+
+        parts = fc.relpath.split("/")
+        if "kernels" not in parts or len(parts) < parts.index("kernels") + 3:
+            out.append(
+                self._violation(
+                    fc,
+                    first,
+                    "pl.pallas_call outside the kernel registry — kernels "
+                    "live under kernels/<name>/ with ref.py + ops.py + a "
+                    "parity test",
+                )
+            )
+            return out
+
+        idx = parts.index("kernels")
+        kernel_name = parts[idx + 1]
+        kernel_dir = fc.path
+        for _ in range(len(parts) - (idx + 2)):
+            kernel_dir = kernel_dir.parent
+        if not (kernel_dir / "ref.py").exists():
+            out.append(
+                self._violation(
+                    fc,
+                    first,
+                    f"kernels/{kernel_name}/ has no ref.py — every kernel "
+                    "needs a pure-jnp reference implementation for parity "
+                    "testing",
+                )
+            )
+        if repo.tests_dir is None:
+            out.append(
+                self._violation(
+                    fc,
+                    first,
+                    "no tests/ directory found — cannot verify a parity test "
+                    f"references '{kernel_name}' (pass --tests-dir)",
+                )
+            )
+        elif kernel_name not in repo.tests_text:
+            out.append(
+                self._violation(
+                    fc,
+                    first,
+                    f"no file under tests/ references '{kernel_name}' — every "
+                    "kernel needs a kernel-vs-ref parity test",
+                )
+            )
+        return out
+
+    def _violation(self, fc: FileContext, node: ast.Call, msg: str) -> Violation:
+        return Violation(
+            path=fc.relpath,
+            line=node.lineno,
+            col=node.col_offset,
+            rule=self.rule_id,
+            message=msg,
+        )
+
+
+class PallasClosureRule:
+    rule_id = "RPL004"
+    name = "pallas-float-closure"
+    doc = (
+        "kernel bodies must not close over Python float locals of the "
+        "builder — bind scalars via functools.partial or pass as operands"
+    )
+
+    def check(self, fc: FileContext, repo: RepoContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        defs: Dict[str, ast.FunctionDef] = {
+            n.name: n
+            for n in ast.walk(fc.tree)
+            if isinstance(n, ast.FunctionDef)
+        }
+        module_names = module_level_names(fc.tree)
+        for call in _pallas_calls(fc):
+            kernel = self._kernel_def(call, defs)
+            if kernel is None:
+                continue
+            float_locals = self._enclosing_float_names(fc, kernel)
+            if not float_locals:
+                continue
+            free = self._free_loads(kernel)
+            for name_node, name in free:
+                if name in module_names or name in BUILTIN_NAMES:
+                    continue
+                if name in float_locals:
+                    out.append(
+                        Violation(
+                            path=fc.relpath,
+                            line=name_node.lineno,
+                            col=name_node.col_offset,
+                            rule=self.rule_id,
+                            message=(
+                                f"kernel '{kernel.name}' closes over Python "
+                                f"float '{name}' from its builder — bind it "
+                                "explicitly (functools.partial(kernel, "
+                                f"{name}={name})) or pass it as an operand "
+                                "(SMEM scalar)"
+                            ),
+                            data=(("name", name),),
+                        )
+                    )
+        return out
+
+    def _kernel_def(
+        self, call: ast.Call, defs: Dict[str, ast.FunctionDef]
+    ) -> Optional[ast.FunctionDef]:
+        """Resolve pallas_call's kernel argument to a FunctionDef in this
+        module. ``functools.partial(kernel, ...)`` bindings are explicit and
+        deliberate — the partial'ed function is still checked for *other*
+        (non-bound) float closures."""
+        if not call.args:
+            return None
+        target = call.args[0]
+        if isinstance(target, ast.Call) and call_name(target) == "partial":
+            if target.args and isinstance(target.args[0], ast.Name):
+                target = target.args[0]
+            else:
+                return None
+        if isinstance(target, ast.Name):
+            return defs.get(target.id)
+        return None
+
+    def _enclosing_float_names(
+        self, fc: FileContext, kernel: ast.FunctionDef
+    ) -> Set[str]:
+        """Names bound to Python floats in functions enclosing the kernel
+        def: ``x = 0.125`` assignments, float-annotated / float-defaulted
+        parameters."""
+        floats: Set[str] = set()
+        for anc in fc.ancestors(kernel):
+            if not isinstance(anc, ast.FunctionDef):
+                continue
+            for node in ast.walk(anc):
+                if node is kernel or any(
+                    a is kernel for a in fc.ancestors(node)
+                ):
+                    continue
+                if isinstance(node, ast.Assign) and is_float_constant_expr(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            floats.add(t.id)
+            args = anc.args
+            defaults = list(args.defaults)
+            pos = args.posonlyargs + args.args
+            for param, default in zip(pos[len(pos) - len(defaults):], defaults):
+                if isinstance(default, ast.Constant) and isinstance(
+                    default.value, float
+                ):
+                    floats.add(param.arg)
+            for param in pos + args.kwonlyargs:
+                ann = param.annotation
+                if isinstance(ann, ast.Name) and ann.id == "float":
+                    floats.add(param.arg)
+        return floats
+
+    def _free_loads(self, fn: ast.FunctionDef) -> List[Tuple[ast.Name, str]]:
+        bound = bound_names(fn)
+        out: List[Tuple[ast.Name, str]] = []
+        seen: Set[str] = set()
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Name)
+                and isinstance(node.ctx, ast.Load)
+                and node.id not in bound
+                and node.id not in seen
+            ):
+                seen.add(node.id)
+                out.append((node, node.id))
+        return out
