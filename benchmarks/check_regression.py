@@ -1,0 +1,122 @@
+"""Compare a fresh BENCH_<suite>.json against its committed baseline.
+
+The perf trajectory is tracked by checked-in baselines under
+``benchmarks/baselines/`` (regenerate on the reference machine with
+``PYTHONPATH=src python -m benchmarks.run --only <suite> --out-dir
+benchmarks/baselines`` after an intentional perf change). CI runs the suite
+and fails the build when:
+
+  * a **time** row (name ending in ``_ms`` or ``_s``) regresses by more than
+    ``--time-tol`` (default 15%), or
+  * a **memory** row (name containing ``_kib``, ``_bytes`` or ``_mib``)
+    regresses at all (beyond a 1% float/accounting epsilon) — compiled buffer
+    sizes are deterministic, so any real growth is a change in the program.
+
+Rows are matched by name; rows present on only one side are reported but
+never fail the check (quick runs measure a subset of the full baseline).
+Improvements are reported and always pass. Exit code 0 = clean, 1 =
+regression, 2 = usage/IO error.
+
+    python benchmarks/check_regression.py BENCH_distributed.json
+    python benchmarks/check_regression.py out/BENCH_x.json baselines/BENCH_x.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TIME_SUFFIXES = ("_ms", "_s")
+MEMORY_MARKERS = ("_kib", "_bytes", "_mib")
+
+DEFAULT_TIME_TOL = 0.15
+MEMORY_EPS = 0.01
+
+
+def row_kind(name: str) -> str:
+    """'time' | 'memory' | 'info' — what regression rule a row falls under."""
+    low = name.lower()
+    if any(m in low for m in MEMORY_MARKERS):
+        return "memory"
+    if any(low.endswith(s) for s in TIME_SUFFIXES):
+        return "time"
+    return "info"
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["value"]) for r in payload.get("rows", [])}
+
+
+def compare(current: dict, baseline: dict, time_tol: float = DEFAULT_TIME_TOL):
+    """Returns (failures, lines): failure row names + a full report."""
+    failures, lines = [], []
+    for name in sorted(set(current) | set(baseline)):
+        if name not in baseline:
+            lines.append(f"  NEW      {name} = {current[name]:.6g} (no baseline)")
+            continue
+        if name not in current:
+            lines.append(f"  MISSING  {name} (baseline {baseline[name]:.6g}; not measured)")
+            continue
+        cur, base = current[name], baseline[name]
+        kind = row_kind(name)
+        if base <= 0 or kind == "info":
+            lines.append(f"  info     {name}: {base:.6g} -> {cur:.6g}")
+            continue
+        ratio = cur / base
+        tol = time_tol if kind == "time" else MEMORY_EPS
+        status = "ok"
+        if ratio > 1.0 + tol:
+            status = "FAIL"
+            failures.append(name)
+        elif ratio < 1.0:
+            status = "better"
+        lines.append(
+            f"  {status:<8} {name}: {base:.6g} -> {cur:.6g} "
+            f"({(ratio - 1.0) * 100:+.1f}%, {kind} tol {tol * 100:.0f}%)"
+        )
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly generated BENCH_<suite>.json")
+    ap.add_argument(
+        "baseline",
+        nargs="?",
+        default=None,
+        help="committed baseline (default: benchmarks/baselines/<current basename>)",
+    )
+    ap.add_argument("--time-tol", type=float, default=DEFAULT_TIME_TOL,
+                    help="relative step-time regression tolerance (default 0.15)")
+    args = ap.parse_args(argv)
+
+    baseline_path = args.baseline
+    if baseline_path is None:
+        baseline_path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "baselines",
+            os.path.basename(args.current),
+        )
+    for path in (args.current, baseline_path):
+        if not os.path.exists(path):
+            print(f"check_regression: no such file: {path}", file=sys.stderr)
+            return 2
+
+    failures, lines = compare(
+        load_rows(args.current), load_rows(baseline_path), args.time_tol
+    )
+    print(f"check_regression: {args.current} vs {baseline_path}")
+    print("\n".join(lines))
+    if failures:
+        print(f"\n{len(failures)} regression(s): " + ", ".join(failures))
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,7 +106,8 @@ DPR_SHAPES = {
     # ring slots per device, and the fused Pallas backend keeps the (M, N)
     # extended logits block out of HBM. The loss still all-gathers the
     # passage-bank columns per evaluation, so a transient (bank_size, d)
-    # column block exists per device — budget for it
+    # column block exists per device — budget for it, or pick the
+    # *_xdev_ring cell below which streams the shards instead
     "contaccum_xdev": ShapeCell(
         "contaccum_xdev",
         "contrastive",
@@ -121,6 +122,28 @@ DPR_SHAPES = {
             "xdev": True,
             "shard_banks": True,
             "loss_impl": "fused",
+        },
+    ),
+    # contaccum_xdev with loss_comm='ring': no transient (bank_size, d)
+    # all-gather block — each device streams the D bank shards past its
+    # local query rows via ppermute, merging online-softmax stats, so the
+    # per-eval transient is O(bank_size*d/D). Exact (not approximate) vs
+    # the all-gather cell; trades one all-gather for D-1 ring hops
+    "contaccum_xdev_ring": ShapeCell(
+        "contaccum_xdev_ring",
+        "contrastive",
+        {
+            "method": "contaccum",
+            "global_batch": 2048,
+            "accum_steps": 4,
+            "bank_size": 8192,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "xdev": True,
+            "shard_banks": True,
+            "loss_impl": "fused",
+            "loss_comm": "ring",
         },
     ),
     # full-batch rep-cache backprop + sharded dual banks under shard_map

@@ -75,6 +75,30 @@ class DistCtx:
             return x
         return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
 
+    def ring_perm(self, shift: int = 1):
+        """Static ppermute pairs rotating the combined DP ring by ``shift``:
+        flat device i (in ``shard_index`` order) sends to (i + shift) mod D —
+        one complete cycle covering every device, so no shard's contribution
+        is ever dropped (reprolint RPL002 enforces this for literal tables).
+        ``device_count``/``psum(1, axis)`` are static under shard_map, so the
+        table is a compile-time constant."""
+        d = self.device_count()
+        return [(i, (i + shift) % d) for i in range(d)]
+
+    def ring_rotate(self, x, shift: int = 1):
+        """Rotate every leaf of ``x`` one hop around the flattened DP ring
+        (device i receives device (i - shift) mod D's value). Differentiable:
+        ppermute's transpose is the inverse rotation, so cotangents written
+        against a neighbor's shard ride the ring *back* to the owning device
+        and sum there — the streaming-loss backward pass needs no extra
+        collective. Identity in single-device mode."""
+        if not self.axis:
+            return x
+        perm = self.ring_perm(shift)
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.ppermute(t, self.axis, perm=perm), x
+        )
+
     def psum(self, x):
         if not self.axis:
             return x

@@ -49,6 +49,7 @@ reproduces the global row sum exactly once.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Protocol, Tuple, Union
 
 import jax
@@ -72,10 +73,19 @@ class LossAux(NamedTuple):
 class ExtraColumns(NamedTuple):
     """Extra similarity columns owned by a negative source (e.g. a passage
     bank). ``valid`` masks slots exactly (False slots never enter the
-    softmax)."""
+    softmax).
+
+    ``sharded=False`` (default): ``reps`` is the full (global) column block,
+    present on every device. ``sharded=True``: ``reps`` is this device's
+    ``C_global / D`` shard of a block laid out shard-major over the DP ring
+    (shard s owns global columns ``[s*C_local, (s+1)*C_local)``), and the
+    loss streams the shards around the ring (``loss_comm='ring'``) instead
+    of all-gathering them — same math, ``O(C_global·d / D)`` peak transient
+    memory."""
 
     reps: jnp.ndarray   # (C, d)
     valid: jnp.ndarray  # (C,) bool
+    sharded: bool = False
 
 
 class ExtraRows(NamedTuple):
@@ -127,6 +137,22 @@ class LossBackend(Protocol):
         ties — a measure-zero, metrics-only discrepancy)."""
         ...
 
+    def chunk_stats(
+        self,
+        q_rows: jnp.ndarray,     # (M, d) query rows
+        p_chunk: jnp.ndarray,    # (N_c, d) one chunk of the column set
+        labels: jnp.ndarray,     # (M,) int32 — chunk-local, may be out of range
+        col_mask: jnp.ndarray,   # (N_c,) bool
+        *,
+        temperature: float,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Per-chunk carried online-softmax state ``(lse, pos, amax)`` for the
+        ring-streamed loss. ``labels`` are chunk-local indices; rows whose
+        positive lies in another chunk carry out-of-range labels and must get
+        ``pos = 0`` with zero gradient. Stats from disjoint chunks compose
+        exactly via ``kernels.fused_infonce.ops.merge_row_stats``."""
+        ...
+
 
 class DenseLossBackend:
     """One einsum materializes the (M, N) logits block — the reference path."""
@@ -142,6 +168,20 @@ class DenseLossBackend:
         pos = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
         correct = (jnp.argmax(logits, axis=-1) == labels).astype(STATS_DTYPE)
         return lse - pos, correct
+
+    def chunk_stats(self, q_rows, p_chunk, labels, col_mask, *, temperature):
+        logits = jnp.einsum(
+            "md,nd->mn", q_rows, p_chunk, preferred_element_type=jnp.float32
+        ) / jnp.asarray(temperature, STATS_DTYPE)
+        logits = jnp.where(col_mask[None, :], logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        n = p_chunk.shape[0]
+        owns = (labels >= 0) & (labels < n)
+        safe = jnp.clip(labels, 0, n - 1)
+        pos = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+        # non-owning rows: pos = 0 and, via where, exactly zero gradient
+        pos = jnp.where(owns, pos, jnp.zeros((), STATS_DTYPE))
+        return lse, pos, jnp.max(logits, axis=-1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +222,28 @@ class FusedLossBackend:
         # column index — losses/gradients are unaffected.
         correct = jax.lax.stop_gradient((pos >= amax).astype(STATS_DTYPE))
         return lse - pos, correct
+
+    def chunk_stats(self, q_rows, p_chunk, labels, col_mask, *, temperature):
+        from repro.kernels.fused_infonce.ops import fused_infonce_stats
+
+        interpret = (
+            jax.default_backend() != "tpu"
+            if self.interpret is None
+            else self.interpret
+        )
+        # the kernel handles out-of-range labels natively: the one-hot select
+        # never fires, so pos stays 0 with zero gradient — exactly the
+        # non-owning-chunk contract
+        return fused_infonce_stats(
+            q_rows,
+            p_chunk,
+            labels.astype(jnp.int32),
+            col_mask,
+            1.0 / float(temperature),
+            self.block_m,
+            self.block_n,
+            interpret,
+        )
 
 
 LOSS_BACKENDS = {"dense": DenseLossBackend, "fused": FusedLossBackend}
@@ -246,43 +308,85 @@ def contrastive_loss(
     b_g = p_pos.shape[0]
     n_hard = 0 if len(cols) == 1 else cols[1].shape[0]
 
-    n_extra = 0 if extra_cols is None else extra_cols.reps.shape[0]
-    if n_extra > 0:
+    # ring mode: extra_cols carries only this device's bank shard; the global
+    # extra block is the D shards streamed around the ring, never gathered
+    ring = extra_cols is not None and extra_cols.sharded
+    n_extra_local = 0 if extra_cols is None else extra_cols.reps.shape[0]
+    n_extra = n_extra_local * ctx.device_count() if ring else n_extra_local
+    if n_extra_local > 0 and not ring:
         cols.append(extra_cols.reps.astype(p_pos.dtype))
     p_all = jnp.concatenate(cols, axis=0)
 
     col_mask = jnp.ones((b_g + n_hard,), dtype=bool)
-    if n_extra > 0:
+    if n_extra_local > 0 and not ring:
         col_mask = jnp.concatenate([col_mask, extra_cols.valid], axis=0)
 
     # --- local rows: this device's queries ---
     row_offset = ctx.shard_index() * b_local  # global index of local row 0
     labels_local = row_offset + jnp.arange(b_local, dtype=jnp.int32)
 
-    def row_stats(q_rows, labels):
-        return be.row_stats(q_rows, p_all, labels, col_mask, temperature=temperature)
-
-    per_row_local, correct_local = row_stats(q_local, labels_local)
-    loss_sum = per_row_local.sum()
-    correct_sum = correct_local.sum()
-    n_rows_dev = jnp.asarray(b_local, STATS_DTYPE)
-
-    # --- extra rows (replicated; each device takes a 1/D share) ---
-    if extra_rows is not None and extra_rows.reps.shape[0] > 0 and n_extra > 0:
+    have_extra_rows = (
+        extra_rows is not None and extra_rows.reps.shape[0] > 0 and n_extra > 0
+    )
+    if have_extra_rows:
         labels_extra = (b_g + n_hard + extra_rows.labels.astype(jnp.int32)) % (
             b_g + n_hard + n_extra
-        )
-        per_row_extra, correct_extra = row_stats(
-            extra_rows.reps.astype(q_local.dtype), labels_extra
         )
         w = extra_rows.weight.astype(STATS_DTYPE)
         # replicated rows: every device computes all R rows, each contributes
         # a 1/D share; sharded rows: the R local rows are this device's own
         # partition of the global set, so they enter at full weight
         inv_d = 1.0 if extra_rows.sharded else 1.0 / ctx.device_count()
-        loss_sum = loss_sum + inv_d * jnp.sum(per_row_extra * w)
-        correct_sum = correct_sum + inv_d * jnp.sum(correct_extra * w)
-        n_rows_dev = n_rows_dev + inv_d * w.sum()
+
+    if ring:
+        # evaluate local queries and (sharded) bank rows in one ring pass:
+        # block A (the gathered in-batch columns) plus D rotating bank shards
+        rows = [q_local]
+        labels_all = [labels_local]
+        if have_extra_rows:
+            rows.append(extra_rows.reps.astype(q_local.dtype))
+            labels_all.append(labels_extra)
+        per_row, correct = _ring_row_stats(
+            jnp.concatenate(rows, axis=0),
+            jnp.concatenate(labels_all, axis=0),
+            p_all,
+            extra_cols,
+            ctx,
+            be,
+            temperature=temperature,
+        )
+        loss_sum = per_row[:b_local].sum()
+        correct_sum = correct[:b_local].sum()
+        n_rows_dev = jnp.asarray(b_local, STATS_DTYPE)
+        if have_extra_rows:
+            loss_sum = loss_sum + inv_d * jnp.sum(per_row[b_local:] * w)
+            correct_sum = correct_sum + inv_d * jnp.sum(correct[b_local:] * w)
+            n_rows_dev = n_rows_dev + inv_d * w.sum()
+        # the global column mask never materializes: count valid bank slots
+        # with a psum over the shards instead
+        n_cols_valid = jnp.asarray(b_g + n_hard, STATS_DTYPE) + ctx.psum(
+            extra_cols.valid.sum().astype(STATS_DTYPE)
+        )
+    else:
+        def row_stats(q_rows, labels):
+            return be.row_stats(
+                q_rows, p_all, labels, col_mask, temperature=temperature
+            )
+
+        per_row_local, correct_local = row_stats(q_local, labels_local)
+        loss_sum = per_row_local.sum()
+        correct_sum = correct_local.sum()
+        n_rows_dev = jnp.asarray(b_local, STATS_DTYPE)
+
+        # --- extra rows (replicated; each device takes a 1/D share) ---
+        if have_extra_rows:
+            per_row_extra, correct_extra = row_stats(
+                extra_rows.reps.astype(q_local.dtype), labels_extra
+            )
+            loss_sum = loss_sum + inv_d * jnp.sum(per_row_extra * w)
+            correct_sum = correct_sum + inv_d * jnp.sum(correct_extra * w)
+            n_rows_dev = n_rows_dev + inv_d * w.sum()
+        n_cols_valid = col_mask.sum().astype(STATS_DTYPE)
 
     n_rows_g = jax.lax.stop_gradient(ctx.psum(n_rows_dev))
     n_rows_g = jnp.maximum(n_rows_g, 1.0)
@@ -292,11 +396,176 @@ def contrastive_loss(
         loss=jax.lax.stop_gradient(ctx.psum(loss_dev)),
         accuracy=jax.lax.stop_gradient(ctx.psum(correct_sum) / n_rows_g),
         n_rows=n_rows_g,
-        n_negatives=col_mask.sum().astype(STATS_DTYPE) - 1.0,
+        n_negatives=n_cols_valid - 1.0,
         q_global=jax.lax.stop_gradient(ctx.gather(q_local)),
         p_global=jax.lax.stop_gradient(p_pos),
     )
     return loss_dev, aux
+
+
+def _ring_row_stats(
+    q_rows: jnp.ndarray,
+    labels: jnp.ndarray,
+    p_inbatch: jnp.ndarray,
+    extra_cols: ExtraColumns,
+    ctx: DistCtx,
+    be: LossBackend,
+    *,
+    temperature: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ring-streamed (per_row_loss, correct) over the full global column set
+    [in-batch block (b_g + n_hard)] ++ [bank shard 0] ++ ... ++ [shard D-1]
+    without ever materializing more than one ``C_local``-column bank chunk per
+    device. ``labels`` are global column indices.
+
+    Each of the 1 + D chunk evaluations produces the backend's carried
+    online-softmax state ``(lse, pos, amax)``; ``merge_row_stats`` composes
+    them into the exact full-set statistics. The bank shard (reps in the
+    bank's storage dtype + validity mask) hops the DP ring D-1 times via
+    ``DistCtx.ring_rotate``: at hop k device i holds shard ``(i - k) mod D``,
+    whose global column offset positions its chunk-local labels. Peak
+    transient memory for the extra block is ``O(C_local·d) = O(C_global·d/D)``
+    vs the all-gather path's ``O(C_global·d)``.
+
+    Backward pass: the merge's chain rule scales each chunk's lse cotangent
+    by ``exp(lse_k - lse)``, making every chunk-local softmax coefficient
+    global; dQ accumulates locally across the chunk calls, and any dP
+    cotangent written against a visiting shard rides ppermute's transpose
+    (the inverse rotation) back to the owning device. Bank buffers are
+    stop_gradient'd at push, so in practice the reverse ring carries zeros —
+    but the path is exact regardless.
+
+    Accuracy uses the fused kernel's tie semantics (``pos >= amax``) for both
+    backends — on exact fp32 logit ties a tied positive counts as correct,
+    a measure-zero metrics-only difference from dense argmax.
+    """
+    n_a = p_inbatch.shape[0]
+
+    lse_a, pos_a, amax_a = be.chunk_stats(
+        q_rows, p_inbatch, labels, jnp.ones((n_a,), dtype=bool),
+        temperature=temperature,
+    )
+    owns_a = (labels >= 0) & (labels < n_a)
+    lse_s, pos_s, owns_s, amax_s = _stream_bank_chunks(
+        ctx, be, n_a, temperature, q_rows, labels,
+        extra_cols.reps, extra_cols.valid,
+    )
+
+    from repro.kernels.fused_infonce.ops import merge_row_stats
+
+    lse, pos, amax = merge_row_stats(
+        jnp.concatenate([lse_a[None], lse_s], axis=0),
+        jnp.concatenate([pos_a[None], pos_s], axis=0),
+        jnp.concatenate([owns_a[None], owns_s], axis=0),
+        jnp.concatenate([amax_a[None], amax_s], axis=0),
+    )
+    correct = jax.lax.stop_gradient((pos >= amax).astype(STATS_DTYPE))
+    return lse - pos, correct
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _stream_bank_chunks(ctx, be, n_a, temperature, q_rows, labels, reps, valid):
+    """Per-chunk stats ``(lse, pos, owns, amax)``, each stacked (D, M), for
+    the D bank shards streamed around the DP ring — with a **reverse-streamed
+    backward pass**. Plain AD through the rotation loop would save every
+    visiting shard as a residual (all D alive at once — O(N_mem*d) again,
+    exactly what the ring exists to avoid); the custom VJP instead saves only
+    this device's own shard and re-streams the ring during the backward pass,
+    recomputing each chunk's forward on the fly (jax.vjp), so at most one
+    N_mem/D chunk is resident in either direction. dQ accumulates locally
+    across the hops; each visiting shard's dP cotangent accumulates in a
+    buffer that travels *with* the shard and is delivered home by the final
+    rotation (ppermute's transpose semantics, done by hand here).
+    """
+    out, _ = _stream_fwd(ctx, be, n_a, temperature, q_rows, labels, reps, valid)
+    return out
+
+
+def _stream_chunk_eval(be, q_rows, labels, reps, valid, offset, *, temperature):
+    local_labels = labels - offset
+    lse, pos, amax = be.chunk_stats(
+        q_rows, reps.astype(q_rows.dtype), local_labels, valid,
+        temperature=temperature,
+    )
+    owns = (local_labels >= 0) & (local_labels < reps.shape[0])
+    return lse, pos, owns, amax
+
+
+def _stream_fwd(ctx, be, n_a, temperature, q_rows, labels, reps, valid):
+    d_ring = ctx.device_count()
+    cap_local = reps.shape[0]
+    sidx = ctx.shard_index()
+
+    # lax.scan (not a Python loop) so the rotating shard is a loop *carry*:
+    # one ping-pong buffer regardless of D. An unrolled loop emits D distinct
+    # collective-permute results whose buffers stay concurrently live in the
+    # compiled program — summing back to the full O(N_mem*d) footprint the
+    # ring exists to avoid.
+    def hop(shard, k):
+        # after k hops of the (i -> i+1) rotation, device i holds the shard
+        # pushed by device (i - k) mod D, i.e. global bank columns
+        # [owner*cap_local, (owner+1)*cap_local)
+        owner = (sidx - k) % d_ring
+        reps_k, valid_k = shard
+        stats = _stream_chunk_eval(
+            be, q_rows, labels, reps_k, valid_k,
+            n_a + owner * cap_local, temperature=temperature,
+        )
+        # rotate the raw storage-dtype buffer: minimal bytes on the wire.
+        # Rotating every iteration keeps the scan body uniform; the final
+        # hop returns the shard to its owner.
+        return ctx.ring_rotate(shard), stats
+
+    _, out = jax.lax.scan(hop, (reps, valid), jnp.arange(d_ring))
+    # residuals: this device's own shard only — the visiting shards are
+    # re-streamed (recomputed by a second pass around the ring) in _stream_bwd
+    return out, (q_rows, labels, reps, valid)
+
+
+def _stream_bwd(ctx, be, n_a, temperature, res, cotangents):
+    q_rows, labels, reps, valid = res
+    g_lse, g_pos, _, _ = cotangents  # owns is bool, amax metrics-only
+    d_ring = ctx.device_count()
+    cap_local = reps.shape[0]
+    sidx = ctx.shard_index()
+
+    def hop(carry, inp):
+        (reps_k, valid_k), d_reps_k, dq = carry
+        k, g_lse_k, g_pos_k = inp
+        owner = (sidx - k) % d_ring
+
+        def f(qr, pc):
+            lse, pos, _, amax = _stream_chunk_eval(
+                be, qr, labels, pc, valid_k,
+                n_a + owner * cap_local, temperature=temperature,
+            )
+            return lse, pos, amax
+
+        # recompute this chunk's forward on the fly (the fwd saved only the
+        # local shard): at most one visiting shard plus its cotangent buffer
+        # is resident at a time
+        _, vjp_fn = jax.vjp(f, q_rows, reps_k)
+        dq_k, dp_k = vjp_fn((g_lse_k, g_pos_k, jnp.zeros_like(g_lse_k)))
+        # the shard's cotangent buffer travels *with* the shard: every
+        # device deposits its contribution as the pair passes through, and
+        # the final hop (k = D-1) delivers the accumulated dP to its owner
+        rotated = ctx.ring_rotate(
+            ((reps_k, valid_k), d_reps_k + dp_k.astype(d_reps_k.dtype))
+        )
+        return rotated + (dq + dq_k.astype(dq.dtype),), None
+
+    carry0 = (
+        (reps, valid),
+        jnp.zeros_like(reps),
+        jnp.zeros(q_rows.shape, STATS_DTYPE),
+    )
+    (_, d_reps, dq), _ = jax.lax.scan(
+        hop, carry0, (jnp.arange(d_ring), g_lse, g_pos)
+    )
+    return dq.astype(q_rows.dtype), None, d_reps, None
+
+
+_stream_bank_chunks.defvjp(_stream_fwd, _stream_bwd)
 
 
 def bank_extra_columns(bank_p: Optional[BankState]) -> Optional[ExtraColumns]:
@@ -325,16 +594,24 @@ def bank_extra_rows(
 
 
 def sharded_bank_extra_columns(
-    bank_p: Optional[BankState], ctx: DistCtx
+    bank_p: Optional[BankState], ctx: DistCtx, comm: str = "all_gather"
 ) -> Optional[ExtraColumns]:
-    """Shard-local passage bank -> the *global* extra-column block: rows and
-    validity are all-gathered over the DP axes (shard-major concatenation
-    matches the bank's global ring layout — see memory_bank.shard_push). The
-    gathered block feeds either backend; under the fused Pallas kernel it
-    streams tile-by-tile through VMEM so the extended similarity matrix
-    still never materializes in HBM."""
+    """Shard-local passage bank -> extra columns, under the selected
+    communication strategy (``ContrastiveConfig.loss_comm``):
+
+    * ``"all_gather"`` — rows and validity are all-gathered over the DP axes
+      into the *global* block (shard-major concatenation matches the bank's
+      global ring layout — see memory_bank.shard_push). Transient memory per
+      loss eval is O(N_mem*d) regardless of D.
+    * ``"ring"`` — the shard stays local (``sharded=True``) and the loss
+      streams the D shards around the DP ring with ppermute + online-softmax
+      merges: same math, O(N_mem*d/D) transient memory. Falls back to the
+      gather in single-device mode (where the shard already *is* the bank).
+    """
     if bank_p is None or bank_p.buf.shape[0] == 0:
         return None
+    if comm == "ring" and ctx.is_distributed:
+        return ExtraColumns(reps=bank_p.buf, valid=bank_p.valid, sharded=True)
     return ExtraColumns(reps=ctx.gather(bank_p.buf), valid=ctx.gather(bank_p.valid))
 
 

@@ -63,6 +63,15 @@ gathers the passage-bank columns over ``cfg.dp_axis`` and evaluates only the
 local query-bank rows). Both modes are trajectory-identical to the
 single-device replicated run (tests/test_distributed.py); sharded mode cuts
 per-device bank HBM and extra-row compute by 1/D.
+
+On top of sharded banks, ``cfg.loss_comm`` picks how the shard-local passage
+columns reach each loss evaluation: ``'all_gather'`` (default) materializes
+the global (N_mem, d) block on every device, ``'ring'`` streams the D shards
+around the DP ring with ppermute and merges each N_mem/D chunk into the
+backend's carried online-softmax state (core/loss.py ``_ring_row_stats``) —
+the same loss and gradients (fp summation-order tolerance,
+tests/test_ring_parity.py) at O(N_mem*d/D) transient memory per eval.
+``'ring'`` requires a bank-consuming source with ``shard_banks=True``.
 """
 
 from __future__ import annotations
@@ -111,6 +120,30 @@ from repro.optim.adamw import GradientTransformation, apply_updates
 # Sources without banks carry 0-capacity rings so the scan carry keeps a
 # uniform pytree structure.
 Carry = Tuple[BankState, BankState]
+
+LOSS_COMMS = ("all_gather", "ring")
+
+
+def _validate_loss_comm(cfg: ContrastiveConfig, *, uses_banks: bool) -> None:
+    """Shared loss_comm checks, surfaced at program build."""
+    if cfg.loss_comm not in LOSS_COMMS:
+        raise ValueError(
+            f"unknown loss_comm {cfg.loss_comm!r}; one of {sorted(LOSS_COMMS)}"
+        )
+    if cfg.loss_comm == "ring":
+        if not uses_banks:
+            raise ValueError(
+                "loss_comm='ring' streams sharded bank columns around the DP "
+                "ring, but this negatives source has no bank columns — use a "
+                "bank-consuming source (dual_bank / passage_bank) or leave "
+                "loss_comm='all_gather'"
+            )
+        if not cfg.shard_banks:
+            raise ValueError(
+                "loss_comm='ring' needs shard_banks=True (each device must "
+                "own one N_mem/D shard to stream); replicated banks already "
+                "hold the full column block locally"
+            )
 
 
 # --------------------------------------------------------------------------
@@ -180,7 +213,7 @@ class InBatchNegatives:
         return cfg.resolved_bank_sizes()
 
     def validate(self, cfg):
-        pass
+        _validate_loss_comm(cfg, uses_banks=False)
 
     def begin(self, state, cfg):
         return (state.bank_q, state.bank_p)
@@ -204,6 +237,7 @@ class GatheredInBatch(InBatchNegatives):
     needs_mesh = True
 
     def validate(self, cfg):
+        super().validate(cfg)
         if cfg.dp_axis is None:
             raise ValueError(
                 "negatives='gathered' needs cfg.dp_axis naming the mesh axes "
@@ -243,6 +277,7 @@ class DualBankNegatives:
                 "bank rows are sharded over (single-device banks are already "
                 "'sharded' into one shard — just leave shard_banks off)"
             )
+        _validate_loss_comm(cfg, uses_banks=True)
 
     def begin(self, state, cfg):
         if cfg.reset_banks_each_update:
@@ -255,9 +290,11 @@ class DualBankNegatives:
     def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         bank_q, bank_p = carry
         if self._sharded(cfg, ctx):
-            # shard-local banks: columns gathered to the global block, rows
-            # evaluated locally (each device owns a distinct 1/D partition)
-            extra_cols = sharded_bank_extra_columns(bank_p, ctx)
+            # shard-local banks: columns reach the loss either gathered to
+            # the global block or ring-streamed shard by shard (loss_comm);
+            # rows are evaluated locally either way (each device owns a
+            # distinct 1/D partition)
+            extra_cols = sharded_bank_extra_columns(bank_p, ctx, cfg.loss_comm)
             extra_rows = sharded_bank_extra_rows(bank_q, bank_p, ctx)
         else:
             extra_cols = bank_extra_columns(bank_p)
@@ -302,7 +339,7 @@ class PassageBankNegatives(DualBankNegatives):
     def loss(self, q, pp, ph, carry, *, cfg, ctx, backend=None):
         _, bank_p = carry
         extra_cols = (
-            sharded_bank_extra_columns(bank_p, ctx)
+            sharded_bank_extra_columns(bank_p, ctx, cfg.loss_comm)
             if self._sharded(cfg, ctx)
             else bank_extra_columns(bank_p)
         )

@@ -82,6 +82,15 @@ class ContrastiveConfig:
         Requires ``dp_axis``; only meaningful under shard_map with the bank
         leaves sharded by ``memory_bank.bank_spec`` /
         ``distribution.sharding.contrastive_state_spec``.
+    loss_comm: 'all_gather' | 'ring' — how sharded bank columns reach the
+        loss (core/loss.py). 'all_gather' (default) gathers the full
+        (N_mem, d) passage-column block before every loss eval: O(N_mem*d)
+        transient memory per device, flat in D. 'ring' streams the D shards
+        around the DP ring with ppermute, merging each N_mem/D chunk into the
+        carried online-softmax state: exactly the same loss/gradients (fp
+        summation-order tolerance) at O(N_mem*d/D) transient memory. Requires
+        ``shard_banks`` (and hence ``dp_axis``) plus a bank-consuming
+        negatives source; validated at program build.
     """
 
     method: str = "contaccum"
@@ -106,6 +115,10 @@ class ContrastiveConfig:
     # Shard the memory banks over dp_axis (capacity/D rows per device)
     # instead of replicating them; see the class docstring.
     shard_banks: bool = False
+    # How sharded bank columns reach the loss: 'all_gather' materializes the
+    # global block, 'ring' streams shards around the DP ring (1/D transient
+    # memory); see the class docstring.
+    loss_comm: str = "all_gather"
 
     def resolved_precision(self):
         """The PrecisionPolicy this config runs under (presets resolved)."""

@@ -36,6 +36,19 @@ def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in names if a in ("pod", "data"))
 
 
+def dp_ring_size(mesh: Mesh) -> int:
+    """D — the number of devices on the flattened DP ring (the product of
+    the DP axis sizes). This is the divisor in every 1/D memory statement:
+    sharded banks hold ``bank_size/D`` rows per device, and the ring-streamed
+    loss (``loss_comm='ring'``) peaks at ``O(N_mem*d/D)`` transient bytes per
+    eval. ``DistCtx.ring_perm`` builds its ppermute table over the same
+    flattened ring, in ``DistCtx.shard_index`` (major-to-minor) order."""
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
 # ---------------------------------------------------------------- LM family
 # paths look like: layers/attn/wq, layers/ffn/w_gate, embed, lm_head, ...
 LM_RULES: ShardingRules = [
@@ -92,7 +105,13 @@ def bank_rules(dp: Tuple[str, ...], shard_banks: bool) -> ShardingRules:
     ``shard_banks`` the ring rows (buf/valid/age) are sharded over the DP
     axes — each device owns a contiguous ``capacity/D`` slot block, matching
     memory_bank.shard_push's shard-major global layout — while the global
-    head stays replicated. Without it the banks replicate (the default)."""
+    head stays replicated. Without it the banks replicate (the default).
+
+    The same sharded layout serves both ``loss_comm`` modes: 'all_gather'
+    concatenates the shards (major-to-minor DP order == global slot order)
+    per loss eval, 'ring' leaves them in place and streams them around the
+    DP ring — shard s's rows are global slots [s*cap/D, (s+1)*cap/D) either
+    way, so the two modes index identical global columns."""
     if not shard_banks:
         return [(r"bank_[qp]\b", P())]
     return [

@@ -517,6 +517,10 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     # ring slots; batch sharded, weights replicated, collectives by name)
     xdev = p.get("xdev", False)
     shard_banks = bool(p.get("shard_banks", False))
+    # loss_comm='ring' streams the bank shards around the DP ring at loss
+    # time (O(bank*d/D) transient) instead of all-gathering them; cells opt
+    # in via "loss_comm" and step_program validates it needs shard_banks
+    loss_comm = p.get("loss_comm", "all_gather")
     if shard_banks and not xdev:
         raise ValueError(
             "cell sets shard_banks without xdev: sharded banks need the "
@@ -574,6 +578,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
         # the cross-device negative all-gathers from the batch sharding.
         dp_axis=dp if xdev else None,
         shard_banks=shard_banks,
+        loss_comm=loss_comm,
     )
     enc = make_bert_dual_encoder(bcfg)
     tx = chain(
@@ -638,6 +643,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "precision": policy.name,
             "xdev": xdev,
             "shard_banks": shard_banks,
+            "loss_comm": loss_comm,
             "bank_shards": bank_shards,
             "bank_bytes_per_device": float(bank_bytes_dev),
         },

@@ -11,7 +11,9 @@ Data-parallel shard_map path (requires >= N devices, e.g.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU): ``--dp N``
 shards the batch over an N-way mesh with cross-device in-batch negatives;
 ``--shard-banks`` additionally gives each device a bank/N shard of the
-memory banks instead of replicating them (core/step_program.py).
+memory banks instead of replicating them (core/step_program.py);
+``--loss-comm ring`` then streams those shards around the DP ring at loss
+time instead of all-gathering them (core/loss.py).
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train \
@@ -82,6 +84,14 @@ def main(argv=None):
     ap.add_argument("--shard-banks", action="store_true",
                     help="shard the memory banks over the DP mesh "
                          "(bank/N rows per device) instead of replicating")
+    ap.add_argument("--loss-comm", default="all_gather",
+                    choices=["all_gather", "ring"],
+                    help="how sharded bank columns reach the loss (needs "
+                         "--shard-banks): all_gather materializes the full "
+                         "(bank, d) block per eval; ring streams one bank/N "
+                         "shard at a time around the DP ring via ppermute "
+                         "with an online-softmax merge — exact, peak "
+                         "transient O(bank*d/N) instead of O(bank*d)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--corpus-size", type=int, default=2048)
@@ -95,6 +105,9 @@ def main(argv=None):
         raise SystemExit("--shard-banks needs --dp N (banks shard over the DP mesh)")
     if args.shard_banks and not method_uses_banks(args.method):
         raise SystemExit(f"--shard-banks: method {args.method!r} has no memory banks")
+    if args.loss_comm == "ring" and not args.shard_banks:
+        raise SystemExit("--loss-comm ring needs --shard-banks (it streams "
+                         "the per-device bank shards around the DP ring)")
     if dp:
         if jax.device_count() < dp:
             raise SystemExit(
@@ -121,6 +134,7 @@ def main(argv=None):
         grad_clip_norm=2.0,
         dp_axis="data" if dp else None,
         shard_banks=bool(args.shard_banks and dp and bank),
+        loss_comm=args.loss_comm,
     )
     enc = make_bert_dual_encoder(tiny_bert(), precision=args.precision)
     tx = chain(

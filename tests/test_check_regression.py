@@ -1,0 +1,92 @@
+"""benchmarks/check_regression.py: row classification, tolerance rules, and
+CLI exit codes — the contract the benchmark-regression CI job enforces."""
+
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from benchmarks.check_regression import compare, main, row_kind  # noqa: E402
+
+
+def test_row_kind_classification():
+    assert row_kind("dist/contaccum/bank2048/ring/step_ms") == "time"
+    assert row_kind("suite/elapsed_s") == "time"
+    assert row_kind("dist/transient/D8/ring/loss_grad_temp_kib") == "memory"
+    assert row_kind("dist/x/bank_kib_per_dev") == "memory"
+    assert row_kind("dist/x/peak_bytes") == "memory"
+    assert row_kind("dist/x/n_rows") == "info"
+
+
+def test_time_tolerance_is_15_percent():
+    base = {"a/step_ms": 100.0}
+    fails, _ = compare({"a/step_ms": 114.0}, base)
+    assert fails == []
+    fails, _ = compare({"a/step_ms": 116.0}, base)
+    assert fails == ["a/step_ms"]
+
+
+def test_memory_regresses_on_any_real_increase():
+    base = {"a/temp_kib": 1000.0}
+    # within the 1% float/accounting epsilon: pass
+    fails, _ = compare({"a/temp_kib": 1005.0}, base)
+    assert fails == []
+    fails, _ = compare({"a/temp_kib": 1020.0}, base)
+    assert fails == ["a/temp_kib"]
+    # improvements always pass
+    fails, _ = compare({"a/temp_kib": 500.0}, base)
+    assert fails == []
+
+
+def test_disjoint_rows_never_fail():
+    # quick CI runs measure a subset of the full baseline: rows present on
+    # only one side are reported but must not fail the check
+    fails, lines = compare(
+        {"new/step_ms": 5.0}, {"old/step_ms": 5.0, "both/temp_kib": 1.0}
+    )
+    assert fails == []
+    report = "\n".join(lines)
+    assert "NEW" in report and "MISSING" in report
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"suite": "x", "rows": [
+        {"name": n, "value": v} for n, v in rows.items()
+    ]}))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    cur, base = tmp_path / "BENCH_x.json", tmp_path / "base.json"
+    _write(base, {"a/step_ms": 100.0, "b/temp_kib": 10.0})
+
+    _write(cur, {"a/step_ms": 105.0, "b/temp_kib": 10.0})
+    assert main([str(cur), str(base)]) == 0
+    assert "no regressions" in capsys.readouterr().out
+
+    _write(cur, {"a/step_ms": 130.0, "b/temp_kib": 10.0})
+    assert main([str(cur), str(base)]) == 1
+    assert "a/step_ms" in capsys.readouterr().out
+
+    assert main([str(tmp_path / "missing.json"), str(base)]) == 2
+
+
+def test_committed_baseline_is_self_consistent():
+    """The checked-in baseline compares clean against itself and covers the
+    transient rows the ring path is accountable for."""
+    baseline = REPO_ROOT / "benchmarks" / "baselines" / "BENCH_distributed.json"
+    payload = json.loads(baseline.read_text())
+    rows = {r["name"]: float(r["value"]) for r in payload["rows"]}
+    fails, _ = compare(rows, rows)
+    assert fails == []
+    for d in (2, 4, 8):
+        for mode in ("base", "all_gather", "ring"):
+            for stage in ("loss_fwd", "loss_grad"):
+                assert f"dist/transient/D{d}/{mode}/{stage}_temp_kib" in rows
+    # the headline inequality the committed numbers must exhibit
+    assert (
+        rows["dist/transient/D8/ring/loss_grad_temp_kib"]
+        < 0.25 * rows["dist/transient/D8/all_gather/loss_grad_temp_kib"]
+    )

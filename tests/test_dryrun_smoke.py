@@ -51,7 +51,7 @@ SCRIPT = textwrap.dedent(
     all_cells = list_cells()
     archs = {a for a, _ in all_cells}
     assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
-    assert len(all_cells) == 51, len(all_cells)  # 49 + serve_topk/eval_topk
+    assert len(all_cells) == 52, len(all_cells)  # 50 + serve_topk/eval_topk
     print("CELL_LIST_OK")
     """
 )

@@ -228,6 +228,58 @@ def test_large_bank_sweep_parity():
     np.testing.assert_allclose(np.asarray(amax), np.asarray(amax_r), rtol=1e-5)
 
 
+def test_merge_row_stats_composes_chunked_softmax_exactly():
+    """(lse, pos, amax) are sufficient statistics: computing them per column
+    chunk and logsumexp-merging must reproduce the whole-matrix stats — both
+    values and gradients (the chain rule through the merge rescales each
+    chunk's cotangent by exp(lse_k - lse), making chunk-local softmax
+    coefficients global). This identity is what lets the ring loss stream
+    one bank shard at a time."""
+    from repro.kernels.fused_infonce.ops import merge_row_stats
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    m, n, d, n_chunks = 16, 48, 8, 4
+    q = jax.random.normal(ks[0], (m, d))
+    p = jax.random.normal(ks[1], (n, d))
+    labels = jax.random.randint(ks[2], (m,), 0, n)
+    valid = jnp.arange(n) % 7 != 0  # masked columns inside chunks
+
+    def whole(q, p):
+        return infonce_stats_ref(q, p, labels, valid)
+
+    def chunked(q, p):
+        c = n // n_chunks
+        parts = []
+        for k in range(n_chunks):
+            lse, pos, amax = infonce_stats_ref(
+                q, p[k * c:(k + 1) * c],
+                jnp.clip(labels - k * c, 0, c - 1),
+                valid[k * c:(k + 1) * c],
+            )
+            owns = (labels >= k * c) & (labels < (k + 1) * c)
+            pos = jnp.where(owns, pos, 0.0)
+            parts.append((lse, pos, owns, amax))
+        lse, pos, owns, amax = (jnp.stack(x) for x in zip(*parts))
+        return merge_row_stats(lse, pos, owns, amax)
+
+    for a, b in zip(whole(q, p), chunked(q, p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    # gradients of the actual training objective mean(lse - pos)
+    def loss(stats_fn):
+        def f(q, p):
+            lse, pos, _ = stats_fn(q, p)
+            return jnp.mean(lse - pos)
+        return f
+
+    gq_w, gp_w = jax.grad(loss(whole), argnums=(0, 1))(q, p)
+    gq_c, gp_c = jax.grad(loss(chunked), argnums=(0, 1))(q, p)
+    np.testing.assert_allclose(np.asarray(gq_w), np.asarray(gq_c), rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gp_w), np.asarray(gp_c), rtol=1e-5,
+                               atol=1e-7)
+
+
 # ----------------------------------------------------------------- plumbing
 def test_default_backend_is_dense():
     assert ContrastiveConfig().loss_impl == "dense"

@@ -145,6 +145,66 @@ def test_collective_axis_good(tmp_path):
     assert res.ok, res.format()
 
 
+_RING_MESH = {
+    "src/mesh.py": """\
+    import jax
+
+    mesh = jax.make_mesh((4,), ("data",))
+    """
+}
+
+
+def test_ppermute_perm_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            **_RING_MESH,
+            "src/ring.py": """\
+            import jax
+
+
+            def f(x):
+                a = jax.lax.ppermute(x, "data", perm=[(0, 1), (0, 2), (1, 0), (2, 0)])
+                b = jax.lax.ppermute(x, "data", perm=[(0, 2), (2, 4), (4, 0)])
+                c = jax.lax.ppermute(x, "data", perm=[(0, 1), (1, 0), (2, 3), (3, 2)])
+                d = jax.lax.ppermute(x, "data", perm=[(0, 1), (1, 0)])
+                return a, b, c, d
+            """,
+        },
+        rules=["RPL002"],
+        axes=(),
+    )
+    vs = only(res, "RPL002")
+    assert all(v.get("check") == "ppermute_perm" for v in vs), res.format()
+    assert [v.line for v in vs] == [5, 6, 7, 8]
+    assert "repeats a source" in vs[0].message
+    assert "contiguous range 0..2" in vs[1].message
+    assert "not a single complete cycle" in vs[2].message
+    assert "declared with size 4" in vs[3].message
+
+
+def test_ppermute_perm_good(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            **_RING_MESH,
+            "src/ring.py": """\
+            import jax
+
+
+            def rotate(x, d):
+                # computed tables (DistCtx.ring_perm style) are runtime facts
+                perm = [(i, (i + 1) % d) for i in range(d)]
+                full = jax.lax.ppermute(x, "data", perm=[(0, 1), (1, 2), (2, 3), (3, 0)])
+                return jax.lax.ppermute(x, "data", perm=perm), full
+            """,
+        },
+        rules=["RPL002"],
+        axes=(),
+    )
+    assert res.ok, res.format()
+
+
 # ---------------------------------------------------------------- RPL003
 
 _KERNEL_OK = {

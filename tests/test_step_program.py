@@ -182,6 +182,22 @@ def test_shard_banks_requires_dp_axis():
         build_step_program(enc, _tx(cfg), cfg)
 
 
+def test_loss_comm_validated_at_build():
+    enc = make_mlp_encoder()
+    base = dict(method="contaccum", accumulation_steps=2, bank_size=8)
+    cfg = ContrastiveConfig(**base, loss_comm="carrier_pigeon")
+    with pytest.raises(ValueError, match="unknown loss_comm"):
+        build_step_program(enc, _tx(cfg), cfg)
+    # ring streams bank shards — meaningless without sharded banks ...
+    cfg = ContrastiveConfig(**base, dp_axis="dp", loss_comm="ring")
+    with pytest.raises(ValueError, match="loss_comm"):
+        build_step_program(enc, _tx(cfg), cfg)
+    # ... or without banks at all
+    cfg = ContrastiveConfig(method="dpr", dp_axis="dp", loss_comm="ring")
+    with pytest.raises(ValueError, match="loss_comm"):
+        build_step_program(enc, _tx(cfg), cfg)
+
+
 def test_every_advertised_composition_builds_and_jits():
     enc = make_mlp_encoder()
     batch = make_batch(jax.random.PRNGKey(5), 8, n_hard=1)

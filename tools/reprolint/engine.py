@@ -117,8 +117,11 @@ class RepoContext:
         self.files = list(files)
         self.tests_dir = tests_dir
         self.mesh_axes: Set[str] = set(extra_axes)
+        self.mesh_axis_sizes: Dict[str, Set[int]] = {}
         for fc in self.files:
             self.mesh_axes |= _declared_mesh_axes(fc.tree)
+            for axis, sizes in _declared_axis_sizes(fc.tree).items():
+                self.mesh_axis_sizes.setdefault(axis, set()).update(sizes)
         self.tests_text = ""
         if tests_dir is not None and tests_dir.is_dir():
             self.tests_text = "\n".join(
@@ -160,6 +163,49 @@ def _declared_mesh_axes(tree: ast.Module) -> Set[str]:
         elif name == "Mesh" and len(node.args) >= 2:
             axes |= set(_string_elems(node.args[1]))
     return axes
+
+
+def _int_elems(node: ast.AST) -> Optional[List[int]]:
+    """Int constants of a literal Tuple/List/Constant; None when any element
+    is computed (those shapes are runtime facts, not lintable ground truth)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[int] = []
+        for elt in node.elts:
+            sub = _int_elems(elt)
+            if sub is None:
+                return None
+            out.extend(sub)
+        return out
+    return None
+
+
+def _declared_axis_sizes(tree: ast.Module) -> Dict[str, Set[int]]:
+    """axis name -> sizes it is declared with, from ``jax.make_mesh(shape,
+    axes)`` call sites whose shape is a literal int tuple. An axis may carry
+    several sizes across debug meshes; RPL002's ppermute perm check only
+    binds when the declared size is unambiguous."""
+    sizes: Dict[str, Set[int]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or _call_name(node.func) != "make_mesh":
+            continue
+        shape = node.args[0] if node.args else None
+        names = node.args[1] if len(node.args) >= 2 else None
+        for kw in node.keywords:
+            if kw.arg == "axis_shapes":
+                shape = kw.value
+            elif kw.arg == "axis_names":
+                names = kw.value
+        if shape is None or names is None:
+            continue
+        dims = _int_elems(shape)
+        axes = _string_elems(names)
+        if dims is None or len(dims) != len(axes):
+            continue
+        for axis, dim in zip(axes, dims):
+            sizes.setdefault(axis, set()).add(dim)
+    return sizes
 
 
 def _call_name(func: ast.AST) -> Optional[str]:

@@ -11,6 +11,17 @@ after the mesh renamed to ``("data", "model")``) fails *inside* shard_map
 tracing with an opaque XLA error at best, and silently no-ops a reduction at
 worst; this rule catches it at lint time. Axis values that are variables
 (``cfg.dp_axis``) are runtime-validated by jax and skipped here.
+
+The rule also validates *literal* ``ppermute`` perm tables. The ring-streamed
+loss (core/loss.py) assumes every ppermute is a rotation: a single complete
+cycle visiting every device on the axis exactly once, so that D hops return
+each shard to its owner and the accumulated dP cotangents ride home. A
+literal table that drops a pair, repeats a source, or splits into two cycles
+deadlocks or silently misroutes shards at runtime — here it fails at lint
+time: the table must be a permutation of the contiguous range 0..n-1 forming
+one n-cycle, with n matching the axis size when ``jax.make_mesh`` declares
+it unambiguously. Computed tables (``DistCtx.ring_perm``'s comprehension) are
+skipped, like variable axis names.
 """
 
 from __future__ import annotations
@@ -37,6 +48,60 @@ _COLLECTIVES = {
 }
 
 _SPEC_NAMES = {"P", "PartitionSpec"}
+
+
+def _literal_perm(node: ast.AST):
+    """[(src, dst), ...] when ``node`` is a literal list/tuple of int pairs,
+    else None (comprehensions, names and calls are runtime facts)."""
+    if not isinstance(node, (ast.List, ast.Tuple)):
+        return None
+    pairs = []
+    for elt in node.elts:
+        if not (isinstance(elt, (ast.Tuple, ast.List)) and len(elt.elts) == 2):
+            return None
+        pair = []
+        for sub in elt.elts:
+            if not (
+                isinstance(sub, ast.Constant)
+                and isinstance(sub.value, int)
+                and not isinstance(sub.value, bool)
+            ):
+                return None
+            pair.append(sub.value)
+        pairs.append(tuple(pair))
+    return pairs
+
+
+def _perm_problem(pairs) -> "str | None":
+    """Why a literal perm table is not a single complete ring rotation."""
+    n = len(pairs)
+    if n == 0:
+        return "table is empty"
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != n:
+        return f"table repeats a source device (sources {sorted(srcs)})"
+    if len(set(dsts)) != n:
+        return f"table repeats a destination device (destinations {sorted(dsts)})"
+    want = set(range(n))
+    if set(srcs) != want or set(dsts) != want:
+        return (
+            f"devices are not the contiguous range 0..{n - 1} "
+            f"(sources {sorted(set(srcs))}, destinations {sorted(set(dsts))})"
+        )
+    # permutation over 0..n-1; a ring rotation is one n-cycle, anything
+    # shorter strands a subset of shards in a sub-ring
+    nxt = dict(pairs)
+    cur, hops = nxt[0], 1
+    while cur != 0:
+        cur = nxt[cur]
+        hops += 1
+    if hops != n:
+        return (
+            f"table is not a single complete cycle (device 0 returns after "
+            f"{hops} hops, ring has {n} devices)"
+        )
+    return None
 
 
 class CollectiveAxisRule:
@@ -69,10 +134,51 @@ class CollectiveAxisRule:
                     axis_node = node.args[idx]
                 if axis_node is not None:
                     out.extend(self._check_axes(fc, repo, name, axis_node))
+                if name == "ppermute":
+                    perm_node = None
+                    for kw in node.keywords:
+                        if kw.arg == "perm":
+                            perm_node = kw.value
+                    if perm_node is None and len(node.args) > 2:
+                        perm_node = node.args[2]
+                    if perm_node is not None:
+                        out.extend(
+                            self._check_perm(fc, repo, axis_node, perm_node)
+                        )
             elif name in _SPEC_NAMES:
                 for arg in list(node.args) + [kw.value for kw in node.keywords]:
                     out.extend(self._check_axes(fc, repo, name, arg))
         return out
+
+    def _check_perm(
+        self,
+        fc: FileContext,
+        repo: RepoContext,
+        axis_node: ast.AST,
+        perm_node: ast.AST,
+    ) -> Iterable[Violation]:
+        pairs = _literal_perm(perm_node)
+        if pairs is None:  # computed table — validated at trace time by jax
+            return
+        problem = _perm_problem(pairs)
+        if problem is None and isinstance(axis_node, ast.Constant):
+            declared = repo.mesh_axis_sizes.get(axis_node.value, set())
+            if len(declared) == 1 and len(pairs) != next(iter(declared)):
+                problem = (
+                    f"table has {len(pairs)} entries but axis "
+                    f"'{axis_node.value}' is declared with size "
+                    f"{next(iter(declared))} — a partial ring deadlocks the "
+                    "devices left out of the cycle"
+                )
+        if problem is not None:
+            yield Violation(
+                path=fc.relpath,
+                line=perm_node.lineno,
+                col=perm_node.col_offset,
+                rule=self.rule_id,
+                message=f"ppermute perm {problem}",
+                data=(("check", "ppermute_perm"),),
+            )
 
     def _check_axes(
         self, fc: FileContext, repo: RepoContext, call: str, axis_node: ast.AST
