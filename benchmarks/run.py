@@ -22,6 +22,7 @@ from benchmarks import (
     bench_fig4,
     bench_fig5,
     bench_fused_infonce,
+    bench_mining,
     bench_precision,
     bench_regimes,
     bench_roofline,
@@ -40,6 +41,7 @@ SUITES = {
     "roofline": bench_roofline.run,
     "fused_infonce": bench_fused_infonce.run,
     "distributed": bench_distributed.run,
+    "mining": bench_mining.run,
     "precision": bench_precision.run,
     "serving": bench_serving.run,
 }

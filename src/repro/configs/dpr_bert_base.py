@@ -73,6 +73,42 @@ DPR_SHAPES = {
             "loss_impl": "fused",
         },
     ),
+    # the paper's geometry + asynchronously mined hard negatives
+    # (repro/mining): each query carries 8 extra passage columns published
+    # by the ANCE-style background refresh — negatives='mined' composes
+    # with direct backprop, no banks
+    "paper_batch_mined": ShapeCell(
+        "paper_batch_mined",
+        "contrastive",
+        {
+            "method": "mined",
+            "global_batch": 128,
+            "accum_steps": 1,
+            "bank_size": 0,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "mined_negatives": 8,
+        },
+    ),
+    # the paper's full K=16 ContAccum geometry with mined columns on top:
+    # the dual banks keep extending the similarity matrix while every batch
+    # also carries 4 globally-mined hard negatives per query — the
+    # contaccum x mined composition the mining subsystem exists for
+    "contaccum_mined": ShapeCell(
+        "contaccum_mined",
+        "contrastive",
+        {
+            "method": "contaccum",
+            "global_batch": 128,
+            "accum_steps": 16,
+            "bank_size": 2048,
+            "q_len": 32,
+            "p_len": 256,
+            "n_hard": 1,
+            "mined_negatives": 4,
+        },
+    ),
     # pod-scale: 16k pairs/step with 32k-deep dual banks
     "contrastive_16k": ShapeCell(
         "contrastive_16k",

@@ -32,6 +32,10 @@ compositions (COMPOSITIONS):
     prebatch       = scan-accumulate x passage-bank  (pre-batch ablation)
     prebatch_cache = rep-cache VJP   x passage-bank  (new)
     dpr_xdev       = direct          x gathered      (cross-device in-batch)
+    mined          = direct          x mined         (ANCE-style mined
+    mined_accum    = scan-accumulate x mined          negatives, injected as
+    mined_cache    = rep-cache VJP   x mined          passage_hard columns by
+                     repro/mining's asynchronous refresh pipeline)
 
 The four legacy compositions are gradient-exact against the original
 monolithic implementations (tests/test_step_program.py).
@@ -226,6 +230,24 @@ class InBatchNegatives:
 
     def push(self, carry, aux, step, *, cfg, ctx):
         return carry
+
+
+class MinedNegatives(InBatchNegatives):
+    """ANCE-style globally-mined hard negatives (``negatives="mined"``).
+
+    The asynchronous miner (repro/mining) publishes per-query negative ids;
+    batch assembly (data/loader.py ``MinedNegativeInjector``) joins them in
+    as extra ``passage_hard`` columns *before* the batch reaches the
+    program. Inside the update the mined passages are therefore ordinary
+    hard-negative columns — the loss math is identical to in-batch, which
+    is exactly why this source composes with every BackpropStrategy
+    unchanged, and why bank sources pick mined columns up for free
+    (contaccum x mined = ``method='contaccum'`` + the injector: the mined
+    columns ride ``passage_hard`` while the banks keep extending the
+    matrix). The class exists to state the intent in the registry and to
+    give the composition a first-class name."""
+
+    name = "mined"
 
 
 class GatheredInBatch(InBatchNegatives):
@@ -579,6 +601,7 @@ SOURCES: dict[str, NegativeSource] = {
     s.name: s
     for s in (
         InBatchNegatives(),
+        MinedNegatives(),
         GatheredInBatch(),
         DualBankNegatives(),
         PassageBankNegatives(),
@@ -601,6 +624,9 @@ COMPOSITIONS: dict[str, Tuple[str, str]] = {
     "prebatch": ("passage_bank", "scan"),
     "prebatch_cache": ("passage_bank", "rep_cache"),
     "dpr_xdev": ("gathered", "direct"),
+    "mined": ("mined", "direct"),
+    "mined_accum": ("mined", "scan"),
+    "mined_cache": ("mined", "rep_cache"),
 }
 
 

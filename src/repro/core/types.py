@@ -43,10 +43,15 @@ class ContrastiveConfig:
     (core/step_program.py). Either name a registered composition with
     ``method=`` (legacy strings: 'dpr', 'grad_accum', 'grad_cache',
     'contaccum'; new: 'contcache', 'prebatch', 'prebatch_cache',
-    'dpr_xdev'), or set the axes explicitly:
+    'dpr_xdev', 'mined'/'mined_accum'/'mined_cache'), or set the axes
+    explicitly:
 
-    negatives: 'in_batch' | 'gathered' | 'dual_bank' | 'passage_bank'
-        (None -> resolved from ``method``).
+    negatives: 'in_batch' | 'mined' | 'gathered' | 'dual_bank' |
+        'passage_bank' (None -> resolved from ``method``). 'mined' marks the
+        asynchronously-mined hard negatives of repro/mining: the miner's
+        table is joined into every batch as extra passage_hard columns at
+        assembly time (data/loader.py), so inside the program the source
+        behaves exactly like 'in_batch'.
     backprop: 'direct' | 'scan' | 'rep_cache'
         (None -> resolved from ``method``). An explicitly set axis overrides
         the corresponding half of ``method``.

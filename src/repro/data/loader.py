@@ -5,8 +5,11 @@ strided slice (host_id :: n_hosts) of every global batch, so the union over
 hosts is exactly the global batch and elastic re-partitioning (different
 n_hosts on resume) replays the same global sample sequence (tested).
 
-State = (epoch, step) — two ints, saved with the checkpoint. A background
-prefetch thread overlaps host-side batch assembly with device compute.
+State = (epoch, step) plus the mined-table staleness stamps — four ints,
+saved with the checkpoint. A background prefetch thread overlaps host-side
+batch assembly with device compute; ``MinedNegativeInjector`` joins the
+mining subsystem's double-buffered ``NegativeTable`` (repro/mining) into
+batch assembly as extra hard-negative columns.
 """
 
 from __future__ import annotations
@@ -23,13 +26,30 @@ import numpy as np
 class LoaderState:
     epoch: int = 0
     step: int = 0  # step within epoch
+    # staleness stamps of the last mined NegativeTable batches were joined
+    # against (repro/mining): the training step whose params mined it (-1 =
+    # no table yet) and its monotonic version. Checkpointed so a restored
+    # run can tell how stale its restored negatives are.
+    mined_step: int = -1
+    mined_version: int = 0
 
     def to_dict(self):
-        return {"epoch": self.epoch, "step": self.step}
+        return {
+            "epoch": self.epoch,
+            "step": self.step,
+            "mined_step": self.mined_step,
+            "mined_version": self.mined_version,
+        }
 
     @staticmethod
     def from_dict(d):
-        return LoaderState(epoch=int(d["epoch"]), step=int(d["step"]))
+        # .get: dicts saved before the mining stamps existed restore cleanly
+        return LoaderState(
+            epoch=int(d["epoch"]),
+            step=int(d["step"]),
+            mined_step=int(d.get("mined_step", -1)),
+            mined_version=int(d.get("mined_version", 0)),
+        )
 
 
 class ShardedLoader:
@@ -85,6 +105,7 @@ class PrefetchIterator:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._exc: Optional[BaseException] = None
+        self._exc_delivered = False
         self._thread = threading.Thread(target=self._work, daemon=True)
         self._thread.start()
 
@@ -107,6 +128,7 @@ class PrefetchIterator:
     def __next__(self):
         while True:
             if self._exc is not None:
+                self._exc_delivered = True
                 raise self._exc
             try:
                 return self._q.get(timeout=0.5)
@@ -114,5 +136,72 @@ class PrefetchIterator:
                 continue
 
     def close(self):
+        """Stop the worker — and surface a worker failure the consumer never
+        saw: a crash after the consumer's last __next__ would otherwise be
+        silently swallowed by the shutdown path."""
         self._stop.set()
         self._thread.join(timeout=2.0)
+        if self._exc is not None and not self._exc_delivered:
+            self._exc_delivered = True
+            raise self._exc
+
+
+class MinedNegativeInjector:
+    """Join the miner's published ``NegativeTable`` into batch assembly.
+
+    ``read_table`` is the buffer read (``miner.buffer.read``) — called once
+    per batch, so the whole batch sees one consistent snapshot even if the
+    background refresh swaps mid-assembly. Empty slots (-1: pre-first-
+    refresh, or an under-filled teleportation band) fall back to seeded
+    uniform non-gold corpus ids keyed by (seed, step) — deterministic, so
+    the synchronous-mode trajectory is bit-reproducible and shapes stay
+    static.
+
+    When handed the loader's ``state``, each call stamps the staleness
+    fields (``mined_step``/``mined_version``) so they ride the checkpoint;
+    ``on_step`` (``miner.note_step``) tells the miner how far training has
+    advanced — the refresh-overlap metric.
+    """
+
+    def __init__(
+        self,
+        read_table: Callable[[], "object"],
+        n_passages: int,
+        *,
+        n_negatives: Optional[int] = None,
+        seed: int = 0,
+        state: Optional[LoaderState] = None,
+        on_step: Optional[Callable[[int], None]] = None,
+    ):
+        self._read = read_table
+        self.n_passages = n_passages
+        self.n_negatives = n_negatives
+        self.seed = seed
+        self.state = state
+        self.on_step = on_step
+
+    def mined_ids(
+        self, query_idx: np.ndarray, gold: np.ndarray, step: int
+    ) -> np.ndarray:
+        """(B, n_negatives) int32 passage ids for this batch's queries."""
+        if self.on_step is not None:
+            self.on_step(step)
+        table = self._read()  # one atomic read per batch
+        query_idx = np.asarray(query_idx)
+        gold = np.asarray(gold)
+        width = (
+            table.ids.shape[1] if self.n_negatives is None else self.n_negatives
+        )
+        rows = np.full((len(query_idx), width), -1, np.int32)
+        take = min(width, table.ids.shape[1])
+        rows[:, :take] = table.ids[query_idx][:, :take]
+        # deterministic non-gold fallback: sample [0, n-1) and shift past the
+        # gold id — uniform over the other n-1 passages
+        rng = np.random.default_rng((self.seed, int(step)))
+        draw = rng.integers(0, self.n_passages - 1, size=rows.shape)
+        draw = draw + (draw >= gold[:, None])
+        rows = np.where(rows >= 0, rows, draw).astype(np.int32)
+        if self.state is not None:
+            self.state.mined_step = int(table.step)
+            self.state.mined_version = int(table.version)
+        return rows

@@ -33,13 +33,18 @@ def encode_corpus(enc: DualEncoder, params, passages: np.ndarray, batch: int = 2
 
 
 def recall_at(ids: np.ndarray, gold: np.ndarray, ks: Sequence[int]) -> Dict[str, float]:
-    """Top@k hit rates from ranked id lists (Q, >=max(ks)); -1 ids (empty
-    slots) never match."""
+    """Recall at every cutoff in ``ks`` from one ranked id list
+    (Q, >=max(ks)); -1 ids (empty slots) never match. Each cutoff is
+    reported twice: ``recall@{k}`` (the canonical name — what mining-quality
+    curves plot) and ``top@{k}`` (the historical field, kept for backward
+    compat). One search, many cutoffs — no extra encodes."""
     gold = np.asarray(gold)
-    return {
-        f"top@{k}": float(np.mean((ids[:, :k] == gold[:, None]).any(axis=1)))
-        for k in ks
-    }
+    out: Dict[str, float] = {}
+    for k in ks:
+        hit = float(np.mean((ids[:, :k] == gold[:, None]).any(axis=1)))
+        out[f"top@{k}"] = hit
+        out[f"recall@{k}"] = hit
+    return out
 
 
 def evaluate_topk(
@@ -52,7 +57,10 @@ def evaluate_topk(
     cfg: Optional[RetrieverConfig] = None,
 ) -> Dict[str, float]:
     """Exact retrieval eval over the whole corpus (paper's Top@k): corpus must
-    expose ``eval_split() -> (queries, passages, gold_idx)``.
+    expose ``eval_split() -> (queries, passages, gold_idx)``. Every cutoff
+    in ``ks`` comes out of the *one* search (k = max(ks), then slicing), as
+    both ``recall@{k}`` and legacy ``top@{k}`` keys — pass e.g.
+    ``ks=(1, 10, 100)`` for mining-quality curves at no extra encode cost.
 
     Pass ``retriever`` for periodic eval (the trainer hook): its layout/
     backend/precision and *jitted programs* are reused across calls — the

@@ -608,7 +608,13 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
     )
     state = _shard_like(mesh, state_s, rules)
 
-    b, ql, pl, h = p["global_batch"], p["q_len"], p["p_len"], p["n_hard"]
+    b, ql, pl = p["global_batch"], p["q_len"], p["p_len"]
+    # mined hard negatives (repro/mining) arrive as extra passage_hard
+    # columns injected at batch assembly — to the compiled program they are
+    # indistinguishable from corpus-supplied hard negatives, so the cell
+    # just widens the column axis
+    mined = p.get("mined_negatives", 0)
+    h = p["n_hard"] + mined
     batch = RetrievalBatch(
         query=_sds(mesh, (b, ql), jnp.int32, P(dp, None)),
         passage_pos=_sds(mesh, (b, pl), jnp.int32, P(dp, None)),
@@ -646,6 +652,7 @@ def _contrastive_program(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> CellPro
             "loss_comm": loss_comm,
             "bank_shards": bank_shards,
             "bank_bytes_per_device": float(bank_bytes_dev),
+            "mined_negatives": mined,
         },
     )
 

@@ -18,6 +18,17 @@ time instead of all-gathering them (core/loss.py).
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train \
       --method contaccum --dp 8 --shard-banks --total-batch 64 --bank 256
+
+Asynchronous hard-negative mining (repro/mining): ``--negatives mined``
+spins up a ``HardNegativeMiner`` that periodically re-encodes the corpus
+with a snapshot of the training params on a background thread and publishes
+per-query hard negatives; the loader joins them into every batch as extra
+``passage_hard`` columns. Composes with any --method — with a bank method
+(e.g. contaccum) the banks keep extending the matrix *and* every batch
+carries mined columns:
+
+  PYTHONPATH=src python -m repro.launch.train \
+      --method contaccum --negatives mined --mine-every 50 --mine-topk 32
 """
 
 from __future__ import annotations
@@ -92,6 +103,28 @@ def main(argv=None):
                          "shard at a time around the DP ring via ppermute "
                          "with an online-softmax merge — exact, peak "
                          "transient O(bank*d/N) instead of O(bank*d)")
+    ap.add_argument("--negatives", default=None, choices=["mined"],
+                    help="override the method's negative source: 'mined' "
+                         "runs the asynchronous hard-negative miner "
+                         "(repro/mining) and injects its table into every "
+                         "batch; bank methods keep their banks on top")
+    ap.add_argument("--mine-every", type=int, default=50,
+                    help="trainer steps between mining refreshes")
+    ap.add_argument("--mine-topk", type=int, default=32,
+                    help="mining search depth per query (>= band upper edge)")
+    ap.add_argument("--mine-negatives", type=int, default=4,
+                    help="mined negatives injected per query per batch")
+    ap.add_argument("--mine-band", type=int, nargs=2, default=None,
+                    metavar=("LO", "HI"),
+                    help="teleportation band [LO, HI) of gold-excluded ranks "
+                         "(default [1, mine-topk))")
+    ap.add_argument("--mine-margin", type=float, default=0.0,
+                    help="drop mined candidates scoring within this margin "
+                         "of the gold passage (false-negative guard)")
+    ap.add_argument("--mine-sync", action="store_true",
+                    help="refresh synchronously on the training thread "
+                         "(deterministic; default is the async background "
+                         "pipeline)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--corpus-size", type=int, default=2048)
@@ -119,6 +152,14 @@ def main(argv=None):
         if args.shard_banks and args.bank % dp:
             raise SystemExit(f"--bank {args.bank} not divisible by --dp {dp}")
 
+    source, _ = method_composition(args.method)
+    mine = args.negatives == "mined" or source == "mined"
+    # with a bank method the banks stay the source and mined columns ride
+    # the batch (contaccum x mined); otherwise the source becomes 'mined'
+    negatives = (
+        "mined" if mine and not method_uses_banks(args.method) else None
+    )
+
     bank = args.bank if method_uses_banks(args.method) else 0
     # with --dp the per-device batch is total/dp; accumulation chunks split
     # the *local* batch so K still targets --local-batch rows per chunk
@@ -126,6 +167,7 @@ def main(argv=None):
     _, backprop = method_composition(args.method)
     cfg = ContrastiveConfig(
         method=args.method,
+        negatives=negatives,
         accumulation_steps=k if backprop != "direct" else 1,
         bank_size=bank,
         loss_impl=args.loss_impl,
@@ -168,13 +210,56 @@ def main(argv=None):
     )
     loader = ShardedLoader(args.corpus_size, args.total_batch, seed=args.seed)
 
+    miner = None
+    injector = None
+    hooks = []
+    if mine:
+        from repro.data.loader import MinedNegativeInjector
+        from repro.mining import HardNegativeMiner, MinerConfig
+        from repro.runtime.trainer import PeriodicHook
+
+        band = args.mine_band or (1, args.mine_topk)
+        mcfg = MinerConfig(
+            refresh_every=args.mine_every,
+            top_k=args.mine_topk,
+            n_negatives=args.mine_negatives,
+            depth_lo=band[0],
+            depth_hi=band[1],
+            margin=args.mine_margin,
+            sync=args.mine_sync,
+            precision=args.precision,
+        )
+        # corpus alignment: query i's gold passage IS passage i
+        miner = HardNegativeMiner(
+            enc, mcfg, queries=corpus.queries, passages=corpus.passages
+        )
+        injector = MinedNegativeInjector(
+            miner.buffer.read,
+            corpus.n_passages,
+            seed=args.seed,
+            state=loader.state,
+            on_step=miner.note_step,
+        )
+        hooks.append(
+            PeriodicHook(
+                every=mcfg.refresh_every,
+                fn=miner.refresh_hook,
+                prefix="mine/",
+                name="mine",
+            )
+        )
+
     def next_batch(step):
         idx = loader.next_indices()
         b = corpus.batch(idx)
+        hard = b["passage_hard"]
+        if injector is not None:
+            mined_ids = injector.mined_ids(idx, gold=idx, step=step)
+            hard = np.concatenate([hard, corpus.passages[mined_ids]], axis=1)
         return RetrievalBatch(
             query=jnp.asarray(b["query"]),
             passage_pos=jnp.asarray(b["passage_pos"]),
-            passage_hard=jnp.asarray(b["passage_hard"]),
+            passage_hard=jnp.asarray(hard),
         )
 
     trainer = Trainer(
@@ -186,8 +271,16 @@ def main(argv=None):
         update,
         next_batch,
         loader_state=loader.state,
+        hooks=hooks,
+        aux_state=miner,
     )
     state, report = trainer.run(state)
+    if miner is not None:
+        miner.close()
+        print(
+            f"mining: {miner.refreshes} refreshes, {miner.skipped} skipped, "
+            f"last refresh overlapped {miner.last_overlap} steps"
+        )
     print(
         f"done: {report.steps_run} steps, {report.restarts} restarts, "
         f"final loss {report.final_metrics.get('loss', float('nan')):.4f}, "

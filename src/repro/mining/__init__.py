@@ -1,0 +1,37 @@
+"""Asynchronous hard-negative mining: the training<->serving connector.
+
+ANCE-style (Xiong et al. 2020) periodic re-encode + ANN mining, run through
+the repro.retrieval serving stack *during* training:
+
+  * ``MinerConfig`` (config.py) — refresh cadence, mining depth, the
+    teleportation trust region (Sun et al. 2022), and the passthrough axes
+    (search backend / index layout / precision) of the ``RetrieverConfig``
+    the miner builds its index with.
+  * ``NegativeTable`` / ``NegativeTableBuffer`` (table.py) — the
+    double-buffered per-query id table the loader joins against; publication
+    is one atomic reference swap, so batch assembly never blocks on a
+    refresh and never observes a half-written table.
+  * ``HardNegativeMiner`` (miner.py) — snapshots training params, re-encodes
+    the corpus into an ``IndexStore``, mines top-k per training query via
+    the dense/fused ``SearchBackend``, filters gold + applies teleportation
+    banding, and publishes the table — synchronously (deterministic tests)
+    or on a background thread overlapped with training steps.
+
+The mined ids enter training as extra ``passage_hard`` columns
+(data/loader.py ``MinedNegativeInjector``), so ``negatives="mined"``
+composes with every BackpropStrategy and with the dual memory banks
+(core/step_program.py ``MinedNegatives``).
+"""
+
+from repro.mining.config import MinerConfig
+from repro.mining.miner import HardNegativeMiner, teleport_filter
+from repro.mining.table import NegativeTable, NegativeTableBuffer, empty_table
+
+__all__ = [
+    "MinerConfig",
+    "HardNegativeMiner",
+    "NegativeTable",
+    "NegativeTableBuffer",
+    "empty_table",
+    "teleport_filter",
+]

@@ -1,0 +1,291 @@
+"""HardNegativeMiner: periodic ANCE-style refresh through the serving stack.
+
+One refresh = snapshot the training params to host memory, re-encode the
+corpus into an ``IndexStore`` with the passage tower, mine top-k per
+training query with the dense/fused ``SearchBackend``, drop gold passages,
+apply the teleportation trust region (band + score margin), and publish the
+resulting ``NegativeTable`` with an atomic buffer swap.
+
+Two execution modes (cfg.sync):
+
+  * **async** (default) — the refresh runs on a background thread against
+    the param *snapshot*; training steps keep dispatching concurrently and
+    the loader keeps serving the previous table until the swap. Worker
+    exceptions are captured and re-raised on the consumer side at the next
+    miner call (the PrefetchIterator contract). A refresh request arriving
+    while one is in flight is skipped (counted), never queued — mining
+    depth-2 stale tables helps nobody.
+  * **sync** — the refresh blocks the caller. Deterministic: same params,
+    same corpus, same config => bit-identical table (tests/test_mining.py).
+
+The whole pipeline is intentionally host-side (numpy tables, a thread, an
+index rebuild): calling any refresh entry point from jitted code would run
+it once at trace time and bake a stale table in as a constant — reprolint's
+RPL005 mining extension flags exactly that.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.types import DualEncoder
+from repro.mining.config import MinerConfig
+from repro.mining.table import NegativeTable, NegativeTableBuffer, empty_table
+from repro.retrieval.retriever import Retriever
+
+
+def teleport_filter(
+    ids: np.ndarray,
+    scores: np.ndarray,
+    gold: np.ndarray,
+    *,
+    depth_lo: int,
+    depth_hi: int,
+    margin: float,
+    n_out: int,
+) -> np.ndarray:
+    """Teleportation filtering of ranked candidates (Sun et al. 2022).
+
+    ids/scores: (Q, K) ranked best-first (the SearchBackend contract);
+    ids -1 = empty. gold: (Q,) gold passage id per query. Per row:
+
+      1. drop empty slots and the gold passage;
+      2. rank the survivors 0..; keep ranks in ``[depth_lo, depth_hi)``
+         (the band — skipping the very top keeps negatives in the trust
+         region);
+      3. drop banded candidates scoring within ``margin`` of the reference
+         score (gold's score when gold was retrieved, else the top score) —
+         likely unlabeled positives. margin=0.0 still drops candidates
+         scoring >= the reference.
+
+    Returns (Q, n_out) int32; rows with fewer survivors pad with -1.
+    """
+    ids = np.asarray(ids)
+    scores = np.asarray(scores)
+    gold = np.asarray(gold)
+    q, _ = ids.shape
+    out = np.full((q, n_out), -1, np.int32)
+    is_gold = ids == gold[:, None]
+    valid = (ids >= 0) & ~is_gold
+    # reference score: gold's if retrieved, else the best retrieved score
+    has_gold = is_gold.any(axis=1)
+    gold_score = np.where(is_gold, scores, -np.inf).max(axis=1)
+    ref = np.where(has_gold, gold_score, scores[:, 0])
+    # gold-excluded rank of each retained candidate
+    rank = np.cumsum(valid, axis=1) - 1
+    keep = valid & (rank >= depth_lo) & (rank < depth_hi) & (scores < ref[:, None] - margin)
+    for i in range(q):
+        row = ids[i, keep[i]][:n_out]
+        out[i, : len(row)] = row
+    return out
+
+
+def _host_snapshot(params: Any) -> Any:
+    """Pull the param pytree to host memory: the refresh must not hold
+    references into device buffers the optimizer is about to overwrite, and
+    the background thread must not race device placement with training."""
+    return jax.device_get(params)
+
+
+class HardNegativeMiner:
+    """Owns the refresh pipeline + the published ``NegativeTableBuffer``.
+
+    Built from the *training* DualEncoder and the mining corpus arrays:
+    ``queries`` (Nq, q_len) token rows aligned with the loader's dataset
+    indices, ``passages`` (Np, p_len), and ``gold`` (Nq,) gold passage id
+    per query (defaults to ``arange`` — the SyntheticRetrievalCorpus
+    alignment). The internal Retriever is persistent: its jitted encode and
+    search programs compile once and every refresh reuses them (the rebuild
+    only re-runs the encode).
+    """
+
+    def __init__(
+        self,
+        encoder: DualEncoder,
+        cfg: MinerConfig,
+        *,
+        queries: np.ndarray,
+        passages: np.ndarray,
+        gold: Optional[np.ndarray] = None,
+        mesh=None,
+    ):
+        cfg.validate()
+        self.cfg = cfg
+        self.queries = np.asarray(queries)
+        self.passages = np.asarray(passages)
+        self.gold = (
+            np.arange(len(self.queries), dtype=np.int64)
+            if gold is None
+            else np.asarray(gold)
+        )
+        if len(self.gold) != len(self.queries):
+            raise ValueError(
+                f"gold has {len(self.gold)} rows for {len(self.queries)} queries"
+            )
+        self.buffer = NegativeTableBuffer(
+            empty_table(len(self.queries), cfg.n_negatives)
+        )
+        self.retriever = Retriever(encoder, None, cfg.retriever_config(), mesh=mesh)
+        self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
+        self._observed_step = 0  # latest training step seen by note_step()
+        self.refreshes = 0       # published refreshes
+        self.skipped = 0         # requests dropped because one was in flight
+        self.last_overlap = 0    # training steps observed during the last refresh
+
+    # ------------------------------------------------------------- mining
+    def _mine(self, params: Any, step: int) -> NegativeTable:
+        """One complete refresh against a host param snapshot (any thread)."""
+        cfg = self.cfg
+        r = self.retriever
+        r.params = params
+        r.build_index(self.passages)  # the ANCE re-encode
+        nq = len(self.queries)
+        qb = min(cfg.query_batch, nq)
+        ids = np.full((nq, cfg.top_k), -1, np.int32)
+        scores = np.full((nq, cfg.top_k), -np.inf, np.float32)
+        for lo in range(0, nq, qb):
+            chunk = self.queries[lo : lo + qb]
+            n = len(chunk)
+            if n < qb:  # pad the tail to the one compiled search shape
+                pad = np.zeros((qb - n,) + chunk.shape[1:], chunk.dtype)
+                chunk = np.concatenate([chunk, pad])
+            cid, csc = r.search(chunk)
+            ids[lo : lo + n] = cid[:n]
+            scores[lo : lo + n] = csc[:n]
+        mined = teleport_filter(
+            ids,
+            scores,
+            self.gold,
+            depth_lo=cfg.depth_lo,
+            depth_hi=cfg.depth_hi,
+            margin=cfg.margin,
+            n_out=cfg.n_negatives,
+        )
+        return NegativeTable(
+            ids=mined, step=step, version=self.buffer.read().version + 1
+        )
+
+    def _publish(self, table: NegativeTable, start_step: int) -> None:
+        self.buffer.swap(table)
+        self.last_overlap = max(self._observed_step - start_step, 0)
+        self.refreshes += 1
+
+    # ---------------------------------------------------------- refresh API
+    def refresh(self, params: Any, step: int) -> NegativeTable:
+        """Synchronous refresh: blocks until the new table is published.
+        Drains any in-flight async refresh first (one refresh at a time)."""
+        self.wait()
+        table = self._mine(_host_snapshot(params), int(step))
+        self._publish(table, int(step))
+        return table
+
+    def refresh_async(self, params: Any, step: int) -> bool:
+        """Kick off a background refresh against a snapshot of ``params``.
+        Returns False (and counts a skip) if one is already in flight.
+        Re-raises a previous worker failure on this (consumer) thread."""
+        self._raise_pending()
+        if self._thread is not None:
+            if self._thread.is_alive():
+                self.skipped += 1
+                return False
+            self._thread.join()
+        snapshot = _host_snapshot(params)  # on the caller's thread, pre-fork
+        start = int(step)
+
+        def work():
+            try:
+                self._publish(self._mine(snapshot, start), start)
+            except BaseException as e:  # re-raised at the next consumer call
+                self._exc = e
+
+        self._thread = threading.Thread(
+            target=work, name="hard-negative-miner", daemon=True
+        )
+        self._thread.start()
+        return True
+
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def wait(self) -> None:
+        """Barrier: join any in-flight refresh, then surface its failure."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def note_step(self, step: int) -> None:
+        """Stamp training progress (called per batch by the injector) — the
+        overlap metric is how many of these land during one refresh."""
+        self._observed_step = max(self._observed_step, int(step))
+
+    def staleness(self, step: int) -> int:
+        """Optimizer updates the served table lags behind ``step`` (one huge
+        sentinel before the first refresh lands)."""
+        t = self.buffer.read()
+        return int(step) - t.step if t.step >= 0 else int(step) + 1
+
+    # --------------------------------------------------------- trainer hook
+    def refresh_hook(self, state: Any, step: int) -> Dict[str, float]:
+        """PeriodicHook-compatible entry point: the hook's ``every`` is the
+        refresh cadence; metrics land in the history row under the hook
+        prefix. ``state`` is the train state (``.params``) or a bare param
+        pytree."""
+        params = getattr(state, "params", state)
+        if self.cfg.sync:
+            self.refresh(params, step)
+        else:
+            self.refresh_async(params, step)
+        t = self.buffer.read()
+        stale = self.staleness(step)
+        out = {
+            "table_version": float(t.version),
+            "table_staleness": float(stale),
+            "refreshes": float(self.refreshes),
+            "skipped": float(self.skipped),
+            "steps_overlapped": float(self.last_overlap),
+        }
+        if self.cfg.staleness_budget:
+            out["stale"] = float(stale > self.cfg.staleness_budget)
+        return out
+
+    # ----------------------------------------------------- checkpoint state
+    def state_to_save(self) -> Dict[str, np.ndarray]:
+        """Fixed-structure np pytree for the checkpoint payload: the
+        *published* table only. An in-flight refresh is deliberately not
+        captured — on restore it simply re-runs at the next cadence."""
+        t = self.buffer.read()
+        return {
+            "ids": np.asarray(t.ids),
+            "meta": np.asarray([t.step, t.version], np.int64),
+        }
+
+    def load_saved_state(self, tree: Dict[str, np.ndarray]) -> None:
+        """Restore a saved table (drains any in-flight refresh first — it
+        was mined for a timeline the restore just rewound)."""
+        self.wait()
+        meta = np.asarray(tree["meta"])
+        self.buffer.swap(
+            NegativeTable(
+                ids=np.asarray(tree["ids"], np.int32),
+                step=int(meta[0]),
+                version=int(meta[1]),
+            )
+        )
+
+    def close(self) -> None:
+        """Join the worker without re-raising (shutdown path)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._exc = None

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -60,6 +60,10 @@ class TrainerConfig:
         the *training-time* encoder (wire it to
         ``repro.evaluation.evaluate_topk`` via a Retriever). Results are
         merged into the step's history row under ``eval/`` keys.
+        ``eval_every``/``eval_fn`` are sugar over the generic ``hooks=``
+        mechanism below (a ``PeriodicHook(prefix='eval/')``); the mining
+        refresh (repro/mining ``HardNegativeMiner.refresh_hook``) rides the
+        same mechanism, so eval and miner refresh share one cadence path.
     """
 
     total_steps: int
@@ -80,6 +84,26 @@ class StepFailure(RuntimeError):
 
 
 @dataclasses.dataclass
+class PeriodicHook:
+    """A callback the loop fires every ``every`` steps (after the step, when
+    ``(step + 1) % every == 0``; 0 disables).
+
+    ``fn(state, step)`` may return a metric dict — values are merged into
+    the step's history row under ``prefix``. ``advisory`` hooks (eval,
+    miner refresh) must never consume the restore-and-replay budget of the
+    training path: their exceptions are logged and swallowed (a
+    deterministic hook error would otherwise replay the same healthy step
+    until max_restarts kills the run). Non-advisory hooks raise
+    ``StepFailure`` and go through the normal restore path."""
+
+    every: int
+    fn: Callable[[Any, int], Optional[Dict[str, float]]]
+    prefix: str = ""
+    name: str = "hook"
+    advisory: bool = True
+
+
+@dataclasses.dataclass
 class TrainerReport:
     steps_run: int
     restarts: int
@@ -97,6 +121,8 @@ class Trainer:
         *,
         loader_state: Optional[LoaderState] = None,
         eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
+        hooks: Sequence[PeriodicHook] = (),
+        aux_state: Optional[Any] = None,
         # test hooks ------------------------------------------------------
         fault_hook: Optional[Callable[[int], None]] = None,
         clock: Callable[[], float] = time.monotonic,
@@ -106,6 +132,18 @@ class Trainer:
         self.next_batch = next_batch
         self.loader_state = loader_state or LoaderState()
         self.eval_fn = eval_fn
+        # aux_state: an optional side object riding the checkpoint payload —
+        # anything with state_to_save() -> fixed-structure np pytree and
+        # load_saved_state(tree) (e.g. the mining subsystem's table)
+        self.aux_state = aux_state
+        self._hooks: List[PeriodicHook] = list(hooks)
+        if eval_fn is not None:
+            # legacy sugar: eval is just one more periodic hook
+            self._hooks.append(
+                PeriodicHook(
+                    every=cfg.eval_every, fn=eval_fn, prefix="eval/", name="eval"
+                )
+            )
         self.fault_hook = fault_hook
         self.clock = clock
         self._stop = False
@@ -129,12 +167,15 @@ class Trainer:
     def _save(self, step: int, state, *, block: bool = False):
         if self._ckpt is None:
             return
+        ls = self.loader_state
         payload = {
             "state": state,
             "loader": np.asarray(
-                [self.loader_state.epoch, self.loader_state.step], np.int64
+                [ls.epoch, ls.step, ls.mined_step, ls.mined_version], np.int64
             ),
         }
+        if self.aux_state is not None:
+            payload["aux"] = self.aux_state.state_to_save()
         self._ckpt.save(step, payload, block=block)
 
     def _restore(self, template_state):
@@ -142,11 +183,18 @@ class Trainer:
             return None
         payload = {
             "state": template_state,
-            "loader": np.zeros((2,), np.int64),
+            "loader": np.zeros((4,), np.int64),
         }
+        if self.aux_state is not None:
+            # the current aux pytree is its own template (fixed structure)
+            payload["aux"] = self.aux_state.state_to_save()
         restored, step = self._ckpt.restore_latest(payload)
-        self.loader_state.epoch = int(restored["loader"][0])
-        self.loader_state.step = int(restored["loader"][1])
+        ls = self.loader_state
+        ls.epoch, ls.step, ls.mined_step, ls.mined_version = (
+            int(v) for v in restored["loader"]
+        )
+        if self.aux_state is not None:
+            self.aux_state.load_saved_state(restored["aux"])
         return restored["state"], step
 
     # -- the loop -------------------------------------------------------------
@@ -183,28 +231,28 @@ class Trainer:
                 ema = dt if ema is None else cfg.ema_decay * ema + (1 - cfg.ema_decay) * dt
 
                 last_metrics = self._log(step, metrics, dt)
-                if (
-                    self.eval_fn is not None
-                    and cfg.eval_every
-                    and (step + 1) % cfg.eval_every == 0
-                ):
-                    # eval is advisory: a failing eval must never consume
-                    # the restore-and-replay budget of the training path
-                    # (a deterministic eval error would otherwise replay
-                    # the same healthy step until max_restarts kills it)
+                for hook in self._hooks:
+                    if not hook.every or (step + 1) % hook.every:
+                        continue
                     try:
-                        evals = {
-                            f"eval/{k}": float(v)
-                            for k, v in self.eval_fn(state, step).items()
-                        }
+                        res = hook.fn(state, step)
                     except Exception as e:
-                        print(f"step {step}: eval failed ({e})", flush=True)
+                        if not hook.advisory:
+                            raise StepFailure(
+                                f"{hook.name} hook failed at step {step}: {e}"
+                            ) from e
+                        print(f"step {step}: {hook.name} failed ({e})", flush=True)
                     else:
-                        last_metrics.update(evals)  # history row, in place
-                        msg = " ".join(
-                            f"{k}={v:.4f}" for k, v in evals.items()
-                        )
-                        print(f"step {step}: {msg}", flush=True)
+                        vals = {
+                            f"{hook.prefix}{k}": float(v)
+                            for k, v in (res or {}).items()
+                        }
+                        if vals:
+                            last_metrics.update(vals)  # history row, in place
+                            msg = " ".join(
+                                f"{k}={v:.4f}" for k, v in vals.items()
+                            )
+                            print(f"step {step}: {msg}", flush=True)
                 if cfg.checkpoint_dir and (step + 1) % cfg.checkpoint_every == 0:
                     self._save(step, state)
                 step += 1

@@ -51,7 +51,8 @@ SCRIPT = textwrap.dedent(
     all_cells = list_cells()
     archs = {a for a, _ in all_cells}
     assert len(archs) == 11, sorted(archs)   # 10 assigned + dpr-bert-base
-    assert len(all_cells) == 52, len(all_cells)  # 50 + serve_topk/eval_topk
+    # 50 training + serve_topk/eval_topk + paper_batch_mined/contaccum_mined
+    assert len(all_cells) == 54, len(all_cells)
     print("CELL_LIST_OK")
     """
 )

@@ -1,0 +1,456 @@
+"""The asynchronous hard-negative mining subsystem (repro/mining).
+
+Covers the ISSUE's contract: synchronous-mode trajectory determinism,
+teleportation band filtering, async-vs-sync table equivalence at a refresh
+barrier, mined x {direct,scan,rep_cache} x {dense,fused} composition parity,
+checkpoint restore mid-refresh, the PrefetchIterator exception-swallowing
+regression, and the LoaderState mined-stamp round trip.
+
+Runs in its own CI job (like the ring-parity suite); tier-1 ignores it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import make_mlp_encoder
+
+from repro.core.step_program import build_step_program, init_state
+from repro.core.types import ContrastiveConfig, RetrievalBatch
+from repro.data.loader import (
+    LoaderState,
+    MinedNegativeInjector,
+    PrefetchIterator,
+    ShardedLoader,
+)
+from repro.mining import (
+    HardNegativeMiner,
+    MinerConfig,
+    NegativeTable,
+    NegativeTableBuffer,
+    empty_table,
+    teleport_filter,
+)
+from repro.optim import chain, clip_by_global_norm, sgd
+from repro.runtime.trainer import PeriodicHook, Trainer, TrainerConfig
+
+DIM = 16
+N_PASSAGES = 48
+
+
+def _vec_corpus(seed: int = 0):
+    """Vector-'token' corpus for the MLP dual encoder: query i's gold
+    passage is passage i (the SyntheticRetrievalCorpus alignment)."""
+    rng = np.random.default_rng(seed)
+    passages = rng.normal(size=(N_PASSAGES, DIM)).astype(np.float32)
+    queries = (passages + 0.1 * rng.normal(size=passages.shape)).astype(np.float32)
+    return queries, passages
+
+
+def _miner_cfg(**kw) -> MinerConfig:
+    base = dict(
+        refresh_every=3, top_k=8, n_negatives=2, depth_lo=1, depth_hi=8,
+        sync=True, query_batch=32,
+    )
+    base.update(kw)
+    return MinerConfig(**base)
+
+
+def _make_miner(seed: int = 0, **cfg_kw):
+    enc = make_mlp_encoder()
+    params = enc.init(jax.random.PRNGKey(seed))
+    queries, passages = _vec_corpus(seed)
+    miner = HardNegativeMiner(
+        enc, _miner_cfg(**cfg_kw), queries=queries, passages=passages
+    )
+    return miner, params, queries, passages
+
+
+# ------------------------------------------------------------- config/table
+def test_miner_config_validation():
+    with pytest.raises(ValueError, match="band"):
+        _miner_cfg(depth_lo=5, depth_hi=5).validate()
+    with pytest.raises(ValueError, match="cover the teleportation band"):
+        _miner_cfg(top_k=4, depth_hi=8).validate()
+    with pytest.raises(ValueError, match="n_negatives"):
+        _miner_cfg(depth_lo=1, depth_hi=2, n_negatives=4).validate()
+    with pytest.raises(ValueError, match="refresh_every"):
+        _miner_cfg(refresh_every=0).validate()
+    _miner_cfg().validate()  # the defaults are a valid point
+
+
+def test_table_swap_is_shape_stable_and_immutable():
+    buf = NegativeTableBuffer(empty_table(4, 2))
+    t = NegativeTable(ids=np.zeros((4, 2), np.int32), step=1, version=1)
+    old = buf.swap(t)
+    assert old.version == 0 and buf.read() is t
+    with pytest.raises(ValueError, match="shape changed"):
+        buf.swap(NegativeTable(ids=np.zeros((4, 3), np.int32)))
+    with pytest.raises(ValueError):  # published tables are read-only
+        buf.read().ids[0, 0] = 7
+
+
+# ------------------------------------------------------- teleportation band
+def test_teleport_filter_gold_excluded_and_band_respected():
+    # one query: ranked ids with gold sitting at rank 1
+    ids = np.array([[7, 0, 3, 9, 5, 2]])
+    scores = np.array([[0.9, 0.8, 0.7, 0.6, 0.5, 0.4]], np.float32)
+    gold = np.array([0])
+    # band [0, 5) over gold-excluded ranks: [7, 3, 9, 5, 2]; margin 0 drops
+    # candidates scoring >= gold's 0.8 -> 7 (0.9) is out
+    out = teleport_filter(
+        ids, scores, gold, depth_lo=0, depth_hi=5, margin=0.0, n_out=3
+    )
+    assert out.tolist() == [[3, 9, 5]]
+    assert not (out == 0).any()  # gold never mined
+    # band [2, 4): gold-excluded ranks 2..3 -> [9, 5]
+    out = teleport_filter(
+        ids, scores, gold, depth_lo=2, depth_hi=4, margin=0.0, n_out=3
+    )
+    assert out.tolist() == [[9, 5, -1]]  # under-filled band pads -1
+    # margin reaches into the band: only scores < 0.8 - 0.15 survive
+    out = teleport_filter(
+        ids, scores, gold, depth_lo=0, depth_hi=5, margin=0.15, n_out=3
+    )
+    assert out.tolist() == [[9, 5, 2]]  # 7 (0.9) and 3 (0.7 >= 0.65) dropped
+    # tighter: margin 0.25 -> only scores < 0.55 survive: [5, 2]
+    out = teleport_filter(
+        ids, scores, gold, depth_lo=0, depth_hi=5, margin=0.25, n_out=3
+    )
+    assert out.tolist() == [[5, 2, -1]]
+
+
+def test_teleport_filter_gold_not_retrieved_uses_top_score():
+    ids = np.array([[7, 3, 9]])
+    scores = np.array([[0.9, 0.5, 0.4]], np.float32)
+    gold = np.array([0])  # not in the list
+    out = teleport_filter(
+        ids, scores, gold, depth_lo=0, depth_hi=3, margin=0.0, n_out=3
+    )
+    # reference = top score 0.9: rank-0 (7) can't beat itself -> dropped
+    assert out.tolist() == [[3, 9, -1]]
+
+
+def test_miner_never_mines_gold():
+    miner, params, *_ = _make_miner()
+    table = miner.refresh(params, step=0)
+    for i in range(table.n_queries):
+        assert i not in table.ids[i]
+
+
+# -------------------------------------------------------------- determinism
+def _train(sync: bool, seed: int = 0, steps: int = 9, ckpt_dir=None):
+    """A tiny mined-negatives training run through the real Trainer."""
+    enc = make_mlp_encoder()
+    queries, passages = _vec_corpus(seed)
+    miner = HardNegativeMiner(
+        enc, _miner_cfg(sync=sync), queries=queries, passages=passages
+    )
+    loader = ShardedLoader(N_PASSAGES, 8, seed=seed)
+    injector = MinedNegativeInjector(
+        miner.buffer.read, N_PASSAGES, seed=seed,
+        state=loader.state, on_step=miner.note_step,
+    )
+    cfg = ContrastiveConfig(method="mined", temperature=1.0)
+    tx = chain(clip_by_global_norm(1.0), sgd(0.05))
+    program = build_step_program(enc, tx, cfg)
+    update = jax.jit(program.update)
+    state = init_state(jax.random.PRNGKey(seed), enc, tx, cfg)
+
+    def next_batch(step):
+        idx = loader.next_indices()
+        mined = injector.mined_ids(idx, gold=idx, step=step)
+        return RetrievalBatch(
+            query=jnp.asarray(queries[idx]),
+            passage_pos=jnp.asarray(passages[idx]),
+            passage_hard=jnp.asarray(passages[mined]),
+        )
+
+    trainer = Trainer(
+        TrainerConfig(
+            total_steps=steps, log_every=1000,
+            checkpoint_dir=ckpt_dir, checkpoint_every=4,
+        ),
+        update,
+        next_batch,
+        loader_state=loader.state,
+        hooks=[
+            PeriodicHook(every=3, fn=miner.refresh_hook, prefix="mine/", name="mine")
+        ],
+        aux_state=miner,
+    )
+    state, report = trainer.run(state)
+    miner.close()
+    return state, report, miner, loader
+
+
+def test_sync_mode_trajectory_is_seed_deterministic():
+    _, r1, m1, _ = _train(sync=True)
+    _, r2, m2, _ = _train(sync=True)
+    l1 = [row["loss"] for row in r1.history]
+    l2 = [row["loss"] for row in r2.history]
+    assert l1 == l2  # bit-identical, not approx
+    assert np.array_equal(m1.buffer.read().ids, m2.buffer.read().ids)
+    # the refresh hook fired on cadence and left its metrics in the history
+    mined_rows = [row for row in r1.history if "mine/table_version" in row]
+    assert [int(row["step"]) for row in mined_rows] == [2, 5, 8]
+    assert mined_rows[-1]["mine/refreshes"] == 3.0
+
+
+def test_different_seed_changes_trajectory():
+    _, r1, _, _ = _train(sync=True, seed=0)
+    _, r2, _, _ = _train(sync=True, seed=1)
+    assert [row["loss"] for row in r1.history] != [row["loss"] for row in r2.history]
+
+
+# ------------------------------------------------------------ async pipeline
+def test_async_matches_sync_at_refresh_barrier():
+    m_sync, params, *_ = _make_miner(sync=True)
+    m_async, _, *_ = _make_miner(sync=False)
+    t_sync = m_sync.refresh(params, step=7)
+    assert m_async.refresh_async(params, step=7)
+    m_async.wait()  # the barrier
+    t_async = m_async.buffer.read()
+    assert np.array_equal(t_sync.ids, t_async.ids)
+    assert (t_sync.step, t_sync.version) == (t_async.step, t_async.version)
+
+
+def test_async_requests_skip_while_in_flight():
+    miner, params, *_ = _make_miner(sync=False)
+    gate = threading.Event()
+    orig = miner._mine
+
+    def gated(p, s):
+        gate.wait(timeout=10)
+        return orig(p, s)
+
+    miner._mine = gated
+    assert miner.refresh_async(params, 0)
+    assert not miner.refresh_async(params, 1)  # one refresh at a time
+    assert miner.skipped == 1
+    gate.set()
+    miner.wait()
+    assert miner.refreshes == 1
+
+
+def test_async_worker_exception_reraises_on_consumer_side():
+    miner, params, *_ = _make_miner(sync=False)
+
+    def boom(p, s):
+        raise RuntimeError("index rebuild exploded")
+
+    miner._mine = boom
+    miner.refresh_async(params, 0)
+    with pytest.raises(RuntimeError, match="index rebuild exploded"):
+        miner.wait()
+    # the failure is delivered once, then the miner is usable again
+    del miner._mine  # restore the class implementation
+    miner.refresh(params, 1)
+    assert miner.buffer.read().version == 1
+
+
+def test_async_overlap_counts_training_steps():
+    miner, params, *_ = _make_miner(sync=False)
+    gate = threading.Event()
+    orig = miner._mine
+
+    def gated(p, s):
+        gate.wait(timeout=10)
+        return orig(p, s)
+
+    miner._mine = gated
+    miner.refresh_async(params, step=10)
+    for s in range(10, 15):  # 5 training steps land while mining runs
+        miner.note_step(s)
+    gate.set()
+    miner.wait()
+    assert miner.last_overlap == 4  # steps 11..14 observed after the start
+
+
+# ------------------------------------------------- injector + loader state
+def test_injector_fallback_is_deterministic_and_gold_free():
+    buf = NegativeTableBuffer(empty_table(N_PASSAGES, 2))
+    state = LoaderState()
+    inj = MinedNegativeInjector(
+        buf.read, N_PASSAGES, seed=3, state=state
+    )
+    idx = np.arange(8)
+    a = inj.mined_ids(idx, gold=idx, step=5)
+    b = inj.mined_ids(idx, gold=idx, step=5)
+    assert np.array_equal(a, b)  # same (seed, step) -> same fallback
+    assert (a >= 0).all() and (a != idx[:, None]).all()
+    assert (state.mined_step, state.mined_version) == (-1, 0)
+    c = inj.mined_ids(idx, gold=idx, step=6)
+    assert not np.array_equal(a, c)  # fallback reshuffles per step
+
+
+def test_injector_joins_table_and_stamps_state():
+    ids = np.tile(np.array([[5, 9]], np.int32), (N_PASSAGES, 1))
+    ids[0] = (-1, 9)  # one empty slot -> fallback fills it
+    buf = NegativeTableBuffer(empty_table(N_PASSAGES, 2))
+    buf.swap(NegativeTable(ids=ids, step=12, version=2))
+    state = LoaderState()
+    inj = MinedNegativeInjector(buf.read, N_PASSAGES, seed=0, state=state)
+    got = inj.mined_ids(np.arange(4), gold=np.arange(4), step=20)
+    assert got[1:].tolist() == [[5, 9]] * 3
+    assert got[0, 1] == 9 and got[0, 0] not in (-1, 0)  # filled, non-gold
+    assert (state.mined_step, state.mined_version) == (12, 2)
+
+
+def test_loader_state_round_trips_mined_stamps():
+    st = LoaderState(epoch=2, step=7, mined_step=40, mined_version=3)
+    assert LoaderState.from_dict(st.to_dict()) == st
+    # dicts saved before the stamps existed still restore
+    legacy = LoaderState.from_dict({"epoch": 1, "step": 2})
+    assert (legacy.mined_step, legacy.mined_version) == (-1, 0)
+
+
+def test_prefetch_close_surfaces_unseen_worker_exception():
+    consumed = threading.Event()
+    n = {"calls": 0}
+
+    def fn():
+        n["calls"] += 1
+        if n["calls"] == 1:
+            return {"x": np.zeros(1)}
+        consumed.wait(timeout=10)
+        raise RuntimeError("worker died after the consumer stopped reading")
+
+    it = PrefetchIterator(fn, depth=1)
+    assert "x" in next(it)
+    consumed.set()  # let the worker crash producing the item nobody reads
+    deadline = time.monotonic() + 10
+    while it._exc is None and time.monotonic() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="worker died"):
+        it.close()  # the old close() swallowed this silently
+
+
+def test_prefetch_close_does_not_replay_delivered_exception():
+    def fn():
+        raise RuntimeError("boom")
+
+    it = PrefetchIterator(fn, depth=1)
+    with pytest.raises(RuntimeError, match="boom"):
+        next(it)
+    it.close()  # already delivered via __next__: close stays quiet
+
+
+# ------------------------------------------------------- composition parity
+@pytest.mark.parametrize("backprop", ["direct", "scan", "rep_cache"])
+@pytest.mark.parametrize("loss_impl", ["dense", "fused"])
+def test_mined_composes_with_every_strategy_and_backend(backprop, loss_impl):
+    """negatives='mined' is mathematically in-batch over the widened batch:
+    one update must match the in_batch source bit-for-bit on the same
+    (mined-column-carrying) batch, for every strategy x loss backend."""
+    enc = make_mlp_encoder()
+    queries, passages = _vec_corpus()
+    miner, params, *_ = _make_miner()
+    table = miner.refresh(params, 0)
+    idx = np.arange(8)
+    batch = RetrievalBatch(
+        query=jnp.asarray(queries[idx]),
+        passage_pos=jnp.asarray(passages[idx]),
+        passage_hard=jnp.asarray(passages[table.ids[idx]]),
+    )
+
+    def run(negatives):
+        cfg = ContrastiveConfig(
+            method="dpr",
+            negatives=negatives,
+            backprop=backprop,
+            accumulation_steps=1 if backprop == "direct" else 2,
+            loss_impl=loss_impl,
+            temperature=1.0,
+        )
+        tx = chain(clip_by_global_norm(1.0), sgd(0.05))
+        program = build_step_program(enc, tx, cfg)
+        state = init_state(jax.random.PRNGKey(0), enc, tx, cfg, params=params)
+        new_state, metrics = jax.jit(program.update)(state, batch)
+        return jax.device_get(metrics), jax.device_get(new_state.params)
+
+    m_mined, p_mined = run("mined")
+    m_base, p_base = run("in_batch")
+    assert np.isfinite(m_mined.loss)
+    assert float(m_mined.loss) == float(m_base.loss)
+    for a, b in zip(jax.tree_util.tree_leaves(p_mined), jax.tree_util.tree_leaves(p_base)):
+        assert np.array_equal(a, b)
+
+
+def test_mined_composes_with_dual_banks():
+    """contaccum x mined: the bank source keeps its rings while mined
+    columns ride passage_hard — the composition builds and steps."""
+    enc = make_mlp_encoder()
+    queries, passages = _vec_corpus()
+    miner, params, *_ = _make_miner()
+    table = miner.refresh(params, 0)
+    cfg = ContrastiveConfig(
+        method="contaccum", accumulation_steps=2, bank_size=16, temperature=1.0
+    )
+    tx = chain(clip_by_global_norm(1.0), sgd(0.05))
+    program = build_step_program(enc, tx, cfg)
+    state = init_state(jax.random.PRNGKey(0), enc, tx, cfg, params=params)
+    idx = np.arange(8)
+    batch = RetrievalBatch(
+        query=jnp.asarray(queries[idx]),
+        passage_pos=jnp.asarray(passages[idx]),
+        passage_hard=jnp.asarray(passages[table.ids[idx]]),
+    )
+    state, metrics = jax.jit(program.update)(state, batch)
+    metrics = jax.device_get(metrics)
+    assert np.isfinite(metrics.loss)
+    assert float(metrics.bank_fill_p) > 0  # the banks really engaged
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_save_ignores_in_flight_refresh_and_restores(tmp_path):
+    """state_to_save mid-refresh captures the *published* table; restoring
+    it into a fresh miner reproduces that table exactly, and the restored
+    miner can keep refreshing."""
+    miner, params, *_ = _make_miner(sync=False)
+    t1 = miner.refresh(params, step=0)  # published baseline
+
+    gate = threading.Event()
+    orig = miner._mine
+
+    def gated(p, s):
+        gate.wait(timeout=10)
+        return orig(p, s)
+
+    miner._mine = gated
+    miner.refresh_async(params, step=5)  # in flight...
+    saved = miner.state_to_save()        # ...checkpoint lands mid-refresh
+    assert saved["meta"].tolist() == [0, 1]  # the published v1, not v2
+    gate.set()
+    miner.wait()
+    assert miner.buffer.read().version == 2  # the refresh did finish
+
+    restored, _, *_ = _make_miner(sync=False)
+    restored.load_saved_state(saved)
+    t_r = restored.buffer.read()
+    assert np.array_equal(t_r.ids, t1.ids)
+    assert (t_r.step, t_r.version) == (0, 1)
+    t_next = restored.refresh(params, step=9)
+    assert t_next.version == 2  # version continues from the restored table
+
+
+def test_trainer_round_trips_miner_state_and_loader_stamps(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    _, r1, m1, l1 = _train(sync=True, steps=9, ckpt_dir=ckpt)
+    t1 = m1.buffer.read()
+    assert l1.state.mined_step >= 0  # batches joined a real table
+
+    # a fresh trainer over the same dir restores and has nothing left to run
+    _, r2, m2, l2 = _train(sync=True, steps=9, ckpt_dir=ckpt)
+    assert r2.steps_run == 0
+    assert np.array_equal(m2.buffer.read().ids, t1.ids)
+    assert (m2.buffer.read().step, m2.buffer.read().version) == (t1.step, t1.version)
+    assert (l2.state.mined_step, l2.state.mined_version) == (
+        l1.state.mined_step, l1.state.mined_version,
+    )

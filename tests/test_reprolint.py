@@ -369,6 +369,59 @@ def test_jit_hazard_good_static_and_shape(tmp_path):
     assert res.ok, res.format()
 
 
+def test_jit_hazard_mining_refresh_fires_with_line(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/jitted.py": """\
+            import jax
+
+
+            @jax.jit
+            def f(state, miner):
+                miner.refresh_async(state.params, state.step)
+                return state
+
+
+            def g(state, self):
+                self.miner.refresh(state.params, 0)
+                return state
+
+
+            g_fast = jax.jit(g)
+            """
+        },
+        rules=["RPL005"],
+    )
+    vs = only(res, "RPL005")
+    assert [v.line for v in vs] == [6, 11]
+    assert "mining refresh entry point" in vs[0].message
+    assert "PeriodicHook" in vs[0].message
+
+
+def test_jit_hazard_mining_refresh_good(tmp_path):
+    res = lint(
+        tmp_path,
+        {
+            "src/jitted.py": """\
+            import jax
+
+
+            @jax.jit
+            def f(x, cache):
+                cache.refresh()  # no miner/mining in the owner chain
+                return x
+
+
+            def hook(state, step, miner):  # not jitted: the intended path
+                miner.refresh_async(state.params, step)
+            """
+        },
+        rules=["RPL005"],
+    )
+    assert res.ok, res.format()
+
+
 # ---------------------------------------------------------------- RPL006
 
 

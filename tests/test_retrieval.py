@@ -248,7 +248,13 @@ def test_evaluate_topk_matches_legacy_full_argsort():
             cfg=RetrieverConfig(search_impl=impl, score_block=16,
                                 block_q=8, block_n=16),
         )
-        assert got == legacy, (impl, got, legacy)
+        # legacy top@k fields are preserved exactly; each cutoff is also
+        # reported under its canonical recall@k alias (same value, one search)
+        assert {k: v for k, v in got.items() if k.startswith("top@")} == legacy, (
+            impl, got, legacy
+        )
+        for k in (1, 5, 20):
+            assert got[f"recall@{k}"] == got[f"top@{k}"]
 
 
 def test_eval_search_memory_bounded_by_block():

@@ -29,6 +29,16 @@ _SHARD_MAP_NAMES = {"shard_map", "sm"}      # get_shard_map() convention
 _HOST_CALLS = {"print", "input", "breakpoint", "open"}
 _HOST_MODULES = {"np.random", "numpy.random", "random", "time"}
 
+#: refresh entry points of the mining subsystem (repro/mining): the whole
+#: refresh pipeline is host-side by construction — a corpus re-encode, a
+#: worker thread, numpy table writes and an atomic buffer swap. Called from
+#: jitted code it would run once at trace time and bake the then-current
+#: table in as a compile-time constant. Matched as <...miner/mining...>.<entry>
+#: so e.g. ``self.miner.refresh_async(...)`` or ``mining.refresh(...)`` fire
+#: while an unrelated ``cache.refresh()`` does not.
+_MINING_ENTRY_ATTRS = {"refresh", "refresh_async", "refresh_hook", "wait", "poll"}
+_MINING_OWNER_HINTS = ("miner", "mining")
+
 #: attribute probes that are static (concrete) on tracers
 _STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval"}
 
@@ -168,6 +178,19 @@ class JitHazardRule:
                         "executes at trace time only — use jax.debug.print / "
                         "jax.experimental.io_callback, or hoist it out",
                     )
+                    continue
+                mining = self._mining_refresh_call(node)
+                if mining is not None:
+                    yield self._violation(
+                        fc,
+                        node,
+                        f"mining refresh entry point {mining}(...) inside "
+                        f"jitted '{fn.name}' runs the host-side refresh "
+                        "pipeline (corpus re-encode, worker thread, np table "
+                        "swap) at trace time only, baking a stale negative "
+                        "table in as a constant — drive the miner from a "
+                        "trainer PeriodicHook outside the jitted step",
+                    )
 
     def _violation(self, fc: FileContext, node: ast.AST, msg: str) -> Violation:
         return Violation(
@@ -186,6 +209,20 @@ class JitHazardRule:
             for mod in _HOST_MODULES:
                 if full.startswith(mod + "."):
                     return full
+        return None
+
+    def _mining_refresh_call(self, node: ast.Call) -> Optional[str]:
+        """``<owner>.<entry>`` where the owner chain names the miner — the
+        mining-subsystem extension of the host-call net (see
+        _MINING_ENTRY_ATTRS above)."""
+        full = dotted_name(node.func)
+        if full is None:
+            return None
+        parts = full.split(".")
+        if len(parts) < 2 or parts[-1] not in _MINING_ENTRY_ATTRS:
+            return None
+        if any(h in p.lower() for p in parts[:-1] for h in _MINING_OWNER_HINTS):
+            return full
         return None
 
     def _dynamic_traced_ref(

@@ -128,6 +128,20 @@ WHITELIST: Tuple[WhitelistEntry, ...] = (
         ),
     ),
     WhitelistEntry(
+        pattern="src/repro/mining/*.py",
+        rules=("RPL001",),
+        dtypes=_FP32,
+        reason=(
+            "The mining refresh pipeline is deliberately host-side (numpy "
+            "id tables, a worker thread, an atomic buffer swap — never "
+            "jitted): its fp32 score scratch mirrors the SearchBackend's "
+            "always-fp32 score contract on the host. On-device dtypes still "
+            "come from MinerConfig's precision passthrough to "
+            "RetrieverConfig; RPL005's mining extension separately flags "
+            "any jitted caller reaching these entry points."
+        ),
+    ),
+    WhitelistEntry(
         pattern="src/repro/launch/steps.py",
         rules=("RPL001",),
         dtypes=_FP32_BF16,
